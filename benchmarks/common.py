@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
+    path = out_path(name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def random_shapes(n: int, seed: int = 0, max_mult: int = 32,
+                  unit: int = 128) -> List[Tuple[int, int, int]]:
+    """The paper's Fig-3 distribution: dims are multiples of 128 below a
+    cap (paper: <=8193; default cap here 4096 to bound simulator time)."""
+    rng = np.random.default_rng(seed)
+    ms = rng.integers(1, max_mult + 1, size=(n, 3)) * unit
+    return [tuple(int(v) for v in row) for row in ms]
+
+
+def timed(fn, *args, repeat: int = 1, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat, out

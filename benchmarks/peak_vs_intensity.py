@@ -1,0 +1,63 @@
+"""Paper Fig. 4 (c)/(d): percent-of-peak as a function of arithmetic
+intensity for selector-chosen kernels.
+
+Per shape: the event simulator runs the selected config; percent-of-peak =
+sim TFLOP/s / roofline(AI) where roofline(AI) = min(peak, AI * HBM_bw) —
+the same normalization the paper uses (Ben Sander's max-achievable peak).
+Binned means reproduce Fig. 4d.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import random_shapes, write_csv
+from repro.core import (GemmProblem, get_hardware, select_gemm_config,
+                        simulate_gemm)
+
+
+def run(n: int = 200, seed: int = 1, hw_name: str = "tpu_v5e",
+        verbose: bool = True):
+    hw = get_hardware(hw_name)
+    peak = hw.flops("bfloat16")
+    rows: List = []
+    for (M, N, K) in random_shapes(n, seed=seed):
+        p = GemmProblem(M=M, N=N, K=K)
+        sel = select_gemm_config(M, N, K, hw=hw)
+        r = simulate_gemm(p, sel.config, hw)
+        ai = p.arithmetic_intensity
+        roof = min(peak, ai * hw.hbm_bandwidth)
+        achieved = p.flops / r.time
+        rows.append([M, N, K, round(ai, 2), achieved / 1e12,
+                     round(100 * achieved / roof, 2),
+                     round(100 * achieved / peak, 2), str(sel.config)])
+    write_csv(f"peak_vs_intensity_{hw_name}.csv",
+              ["M", "N", "K", "arith_intensity", "achieved_tflops",
+               "pct_of_roofline", "pct_of_peak", "config"], rows)
+    # Fig 4d: binned means
+    ais = np.array([r[3] for r in rows])
+    pct = np.array([r[5] for r in rows])
+    bins = np.array([0, 64, 128, 256, 512, 1024, 1e9])
+    if verbose:
+        print(f"[fig4:{hw_name}] percent-of-roofline by intensity bin:")
+        for lo, hi in zip(bins[:-1], bins[1:]):
+            m = (ais >= lo) & (ais < hi)
+            if m.any():
+                print(f"   AI [{lo:6.0f},{hi if hi < 1e8 else np.inf:6.0f}) "
+                      f": {pct[m].mean():5.1f}%  (n={int(m.sum())})")
+        print(f"   overall mean: {pct.mean():.1f}% of roofline")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--hw", default="tpu_v5e")
+    args = ap.parse_args()
+    run(n=args.n, hw_name=args.hw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+CSV + a markdown table for EXPERIMENTS.md: three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, analytic memory fit,
+per (arch x shape x mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(path: str = DRYRUN_DIR) -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(verbose: bool = True, path: str = DRYRUN_DIR):
+    rows = []
+    md = ["| arch | shape | mesh | compute_s | memory_s | coll_s | bound | "
+          "useful | mem GiB/dev | fits |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(path):
+        rf = r.get("roofline", {})
+        mem_an = r.get("memory_analytic_gib", {})
+        fits = mem_an.get("fits_16gib_hbm", "?")
+        total_gib = mem_an.get("total_gib", 0)
+        src = "probes" if "cost_reconstructed" in r else "module"
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["chips"],
+            f"{rf.get('compute_s', 0):.4e}", f"{rf.get('memory_s', 0):.4e}",
+            f"{rf.get('collective_s', 0):.4e}", rf.get("bottleneck", "?"),
+            f"{rf.get('useful_flop_ratio', 0):.3f}",
+            round(total_gib, 2), fits,
+            r.get("microbatches", 1),
+            f"{r.get('cost_reconstructed', r.get('cost_module', {})).get('flops', 0):.4e}",
+            f"{r.get('hbm_bytes_analytic', {}).get('total', 0):.4e}",
+            f"{r.get('cost_module', {}).get('bytes', 0):.4e}",
+            round(r.get("memory", {}).get("temp_bytes", 0) / 2**30, 2),
+            src,
+        ])
+        md.append("| " + " | ".join(str(x) for x in [
+            r["arch"], r["shape"], r["mesh"],
+            f"{rf.get('compute_s', 0):.2e}", f"{rf.get('memory_s', 0):.2e}",
+            f"{rf.get('collective_s', 0):.2e}", rf.get("bottleneck", "?"),
+            f"{rf.get('useful_flop_ratio', 0):.2f}",
+            round(total_gib, 2), fits]) + " |")
+    path_csv = write_csv(
+        "roofline_table.csv",
+        ["arch", "shape", "mesh", "chips", "compute_s", "memory_s",
+         "collective_s", "bottleneck", "useful_flop_ratio",
+         "analytic_mem_gib", "fits_hbm", "microbatches", "flops_dev",
+         "bytes_analytic_dev", "bytes_xla_cpu_dev", "xla_temp_gib",
+         "source"], rows)
+    md_path = path_csv.replace(".csv", ".md")
+    with open(md_path, "w") as f:
+        f.write("\n".join(md) + "\n")
+    if verbose:
+        print(f"[roofline] {len(rows)} cells -> {path_csv}")
+        by_bound = {}
+        for row in rows:
+            by_bound[row[7]] = by_bound.get(row[7], 0) + 1
+        print(f"[roofline] bottleneck distribution: {by_bound}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DRYRUN_DIR)
+    run(path=ap.parse_args().path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper Table II: selection time — analytical model vs autotuning.
+
+The autotune column compiles-and-runs every candidate with the Pallas
+kernel in interpret mode (the only execution path on this CPU container);
+for the largest sizes it is measured on a candidate subset and scaled
+linearly in P (documented in the CSV), exactly because running it in full
+is the paper's point.  tritonBLAS column: first-call (cold) and cached
+selection wall time.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.core import (GemmProblem, candidate_tiles, clear_selection_cache,
+                        select_gemm_config)
+from repro.core.hardware import TPU_V5E
+from repro.kernels import matmul
+
+
+def measure_autotune(M: int, N: int, K: int, max_candidates: int = 8
+                     ) -> tuple:
+    """Compile+run `max_candidates` candidates in interpret mode; scale to
+    the full space. Returns (estimated_full_s, measured_s, P)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype=jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype=jnp.bfloat16)
+    p = GemmProblem(M=M, N=N, K=K)
+    cands = candidate_tiles(p, TPU_V5E, allow_split_k=False,
+                            allow_grouping=False)
+    subset = cands[:: max(1, len(cands) // max_candidates)][:max_candidates]
+    t0 = time.perf_counter()
+    for t in subset:
+        out = matmul(a, b, out_dtype=jnp.float32, config=t,
+                     backend="pallas_interpret")
+        out.block_until_ready()
+    measured = time.perf_counter() - t0
+    full = measured * len(cands) / len(subset)
+    return full, measured, len(cands)
+
+
+def run(sizes=(256, 512, 1024, 2048, 4096, 8192, 16384),
+        autotune_upto: int = 512, verbose: bool = True):
+    rows: List = []
+    for s in sizes:
+        clear_selection_cache()
+        t0 = time.perf_counter()
+        sel = select_gemm_config(s, s, s)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(100):
+            select_gemm_config(s, s, s)
+        cached = (time.perf_counter() - t0) / 100
+        if s <= autotune_upto:
+            auto_full, auto_meas, P = measure_autotune(s, s, s)
+            note = f"measured {P} cands (subset extrapolated)"
+        else:
+            # O(P*M*N*K): scale the largest measured point
+            base = rows[-1] if rows else None
+            auto_full = (rows[-1][4] * (s / sizes[0]) ** 3
+                         if rows else float("nan"))
+            P = sel.n_candidates
+            note = "extrapolated O(P*M*N*K)"
+        rows.append([s, sel.n_candidates, cold * 1e6, cached * 1e6,
+                     auto_full, note])
+        if verbose:
+            print(f"[tableII] {s}^3: select cold {cold*1e6:8.0f}us "
+                  f"cached {cached*1e6:6.2f}us  "
+                  f"autotune(est) {auto_full:10.1f}s  P={sel.n_candidates}")
+    write_csv("selection_overhead.csv",
+              ["size", "P", "select_cold_us", "select_cached_us",
+               "autotune_s", "note"], rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autotune-upto", type=int, default=512)
+    args = ap.parse_args()
+    run(autotune_upto=args.autotune_upto)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""GEMM explorer: inspect the analytical model's view of a problem.
+
+    PYTHONPATH=src python examples/gemm_explorer.py --m 4096 --n 4096 \
+        --k 4096 [--dtype bfloat16] [--hw tpu_v5e] [--top 10]
+
+Shows the ranked candidate table (predicted latency, bottleneck, reuse),
+the simulator's cross-check, and how the choice changes across hardware
+presets (paper Fig. 5 portability).
+"""
+import argparse
+
+from repro.core import (GemmProblem, get_hardware, rank_candidates,
+                        reuse_fraction, select_gemm_config, simulate_gemm)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=4096)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--k", type=int, default=4096)
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--hw", default="tpu_v5e")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    hw = get_hardware(args.hw)
+    p = GemmProblem(M=args.m, N=args.n, K=args.k, in_dtype=args.dtype)
+    print(f"problem: {args.m}x{args.n}x{args.k} {args.dtype} on {hw.name}")
+    print(f"  {p.flops/1e9:.2f} GFLOP, arithmetic intensity "
+          f"{p.arithmetic_intensity:.1f} flops/byte\n")
+
+    ranked = rank_candidates(p, hw)
+    print(f"{len(ranked)} candidates; top {args.top}:")
+    print(f"{'config':24s} {'model us':>9s} {'sim us':>9s} "
+          f"{'TF/s(sim)':>9s} {'reuse':>6s}  bottleneck")
+    for cfg, pred in ranked[:args.top]:
+        sim = simulate_gemm(p, cfg, hw)
+        print(f"{str(cfg):24s} {pred.total*1e6:9.1f} {sim.time*1e6:9.1f} "
+              f"{p.flops/sim.time/1e12:9.1f} "
+              f"{reuse_fraction(p, cfg):6.2f}  {pred.bottleneck}")
+
+    print("\nportability (same model, constants swapped — paper Fig. 5):")
+    for name in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
+        s = select_gemm_config(args.m, args.n, args.k, in_dtype=args.dtype,
+                               hw=get_hardware(name))
+        print(f"  {name:8s} -> {str(s.config):20s} "
+              f"{s.predicted.total*1e6:9.1f} us  "
+              f"{s.predicted_tflops:6.1f} TF/s  {s.predicted.bottleneck}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache, sample with temperature — across any of the ten architectures.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-7b]
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    import sys
+    sys.argv = ["serve", "--arch", args.arch, "--smoke",
+                "--batch", str(args.batch), "--prompt-len", "24",
+                "--gen", str(args.gen)]
+    return serve.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,51 @@
+"""tritonBLAS-on-TPU core: the paper's analytical model + selector."""
+from repro.core.hardware import (
+    DTYPE_BYTES,
+    PRESETS,
+    TPU_V4,
+    TPU_V5E,
+    TPU_V5P,
+    HardwareSpec,
+    calibrate,
+    get_hardware,
+)
+from repro.core.latency import (
+    GemmProblem,
+    LatencyBreakdown,
+    TileConfig,
+    chip_waves,
+    gemm_latency,
+    grid_shape,
+    hbm_traffic,
+    reuse_fraction,
+    revisit_fractions,
+    vmem_working_set,
+)
+from repro.core.roofline import (
+    RooflineReport,
+    cost_analysis_terms,
+    parse_collective_bytes,
+    roofline,
+)
+from repro.core.selector import (
+    Selection,
+    candidate_tiles,
+    clear_selection_cache,
+    rank_candidates,
+    select_gemm_config,
+    selection_cache_size,
+)
+from repro.core.simulator import SimResult, exhaustive_best, simulate_gemm
+
+__all__ = [
+    "DTYPE_BYTES", "PRESETS", "TPU_V4", "TPU_V5E", "TPU_V5P",
+    "HardwareSpec", "calibrate", "get_hardware",
+    "GemmProblem", "LatencyBreakdown", "TileConfig", "chip_waves",
+    "gemm_latency", "grid_shape", "hbm_traffic", "reuse_fraction",
+    "revisit_fractions", "vmem_working_set",
+    "RooflineReport", "cost_analysis_terms", "parse_collective_bytes",
+    "roofline",
+    "Selection", "candidate_tiles", "clear_selection_cache",
+    "rank_candidates", "select_gemm_config", "selection_cache_size",
+    "SimResult", "exhaustive_best", "simulate_gemm",
+]

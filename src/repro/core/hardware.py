@@ -1,0 +1,171 @@
+"""Hardware descriptions for the analytical model (paper §IV, Table I).
+
+The paper parameterizes its model by "measurable hardware rates (bandwidths,
+instruction latencies, and matrix-core shapes)" so it can be retargeted by
+calibration alone (paper §V-E / Fig. 5).  We keep exactly that contract: a
+frozen dataclass of rates, plus presets for TPU v5e (primary target — the
+container's roofline constants), v5p and v4.  Retargeting = new preset.
+
+TPU adaptation of Table I (see DESIGN.md §2):
+
+    paper scope            TPU scope
+    ------------------     --------------------------------------------
+    matrix instruction     MXU systolic macro-atom (128x128x128)
+    register tile          VREG accumulator tile
+    shared-memory tile     Pallas BlockSpec block in VMEM
+    L2 / LLC cache tile    (none on v5e) -> deterministic HBM revisit model
+    device                 one TensorCore; chips multiply at the mesh level
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Mapping, Tuple
+
+DTYPE_BYTES: Dict[str, int] = {
+    "bfloat16": 2,
+    "float16": 2,
+    "float32": 4,
+    "float8_e4m3fn": 1,
+    "int8": 1,
+}
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Calibratable hardware rates. All times in seconds, sizes in bytes."""
+
+    name: str
+    # MXU macro-atom (M, N, K): the instruction-level tile of the hierarchy.
+    mxu_shape: Tuple[int, int, int]
+    # Native sublane tiling (second-minor, minor) per dtype-bytes.
+    # f32 -> (8, 128), bf16 -> (16, 128), int8/fp8 -> (32, 128).
+    lane_width: int
+    sublane_f32: int
+    # Peak matmul throughput per chip, FLOP/s, keyed by input dtype.
+    peak_flops: Mapping[str, float]
+    # Memory system.
+    hbm_bandwidth: float          # B/s
+    hbm_bytes: int                # capacity per chip
+    hbm_latency: float            # Alg. 7's L_lat: first-byte latency
+    vmem_bytes: int               # capacity per core
+    vmem_bandwidth: float         # B/s, VMEM<->VREG
+    vmem_budget_fraction: float   # fraction of VMEM a kernel may claim
+    # Interconnect (per chip).
+    ici_bandwidth: float          # B/s per link
+    ici_links: int
+    # Fixed overheads (the paper's load/store "issue rate" axis).
+    dma_fixed: float              # per-grid-step DMA issue overhead
+    kernel_launch: float          # one-off kernel dispatch cost
+    pipeline_depth: int           # HBM->VMEM double(+)-buffering depth
+
+    # ---- derived helpers -------------------------------------------------
+    def flops(self, dtype: str) -> float:
+        return self.peak_flops.get(dtype, self.peak_flops["bfloat16"])
+
+    def vmem_budget(self) -> int:
+        return int(self.vmem_bytes * self.vmem_budget_fraction)
+
+    def sublane(self, dtype: str) -> int:
+        # Packing: second-minor native tile scales inversely with dtype width.
+        return self.sublane_f32 * (4 // min(DTYPE_BYTES[dtype], 4))
+
+    def ici_bandwidth_total(self) -> float:
+        return self.ici_bandwidth * self.ici_links
+
+    def with_calibration(self, **updates) -> "HardwareSpec":
+        """Paper §V-E: retarget by swapping measured constants only."""
+        return dataclasses.replace(self, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Presets.  v5e numbers match the roofline constants mandated for this repo:
+# 197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s/link ICI.  VMEM bandwidth is
+# modeled at ~22x HBM (scaling-book ratio).
+# ---------------------------------------------------------------------------
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    mxu_shape=(128, 128, 128),
+    lane_width=128,
+    sublane_f32=8,
+    peak_flops={
+        "bfloat16": 197e12,
+        "float32": 197e12 / 4,      # no native f32 matmul path
+        "int8": 394e12,
+        "float8_e4m3fn": 394e12,
+    },
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    hbm_latency=1.0e-6,
+    vmem_bytes=128 * 1024**2,
+    vmem_bandwidth=22 * 819e9,
+    vmem_budget_fraction=0.5,
+    ici_bandwidth=50e9,
+    ici_links=4,                    # 2D torus
+    dma_fixed=1.0e-7,
+    kernel_launch=2.0e-6,
+    pipeline_depth=2,
+)
+
+TPU_V5P = TPU_V5E.with_calibration(
+    name="tpu_v5p",
+    peak_flops={
+        "bfloat16": 459e12,
+        "float32": 459e12 / 4,
+        "int8": 918e12,
+        "float8_e4m3fn": 918e12,
+    },
+    hbm_bandwidth=2765e9,
+    hbm_bytes=95 * 1024**3,
+    vmem_bandwidth=22 * 2765e9,
+    ici_bandwidth=90e9,
+    ici_links=6,                    # 3D torus
+)
+
+TPU_V4 = TPU_V5E.with_calibration(
+    name="tpu_v4",
+    peak_flops={
+        "bfloat16": 275e12,
+        "float32": 275e12 / 4,
+        "int8": 275e12,
+        "float8_e4m3fn": 275e12,
+    },
+    hbm_bandwidth=1228e9,
+    hbm_bytes=32 * 1024**3,
+    vmem_bandwidth=22 * 1228e9,
+    ici_bandwidth=50e9,
+    ici_links=6,
+)
+
+PRESETS: Dict[str, HardwareSpec] = {
+    "tpu_v5e": TPU_V5E,
+    "tpu_v5p": TPU_V5P,
+    "tpu_v4": TPU_V4,
+}
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware {name!r}; presets: {sorted(PRESETS)}")
+
+
+def calibrate(
+    base: HardwareSpec,
+    microbenchmarks: Mapping[str, Callable[[], float]],
+) -> HardwareSpec:
+    """Lightweight calibration hook (paper contribution #2).
+
+    ``microbenchmarks`` maps HardwareSpec field names to zero-arg callables
+    that return a measured rate (e.g. a stream benchmark for hbm_bandwidth).
+    On real hardware these run once at install time; in this CPU container we
+    use the published constants and this remains the documented entry point.
+    """
+    measured = {}
+    for field_name, bench in microbenchmarks.items():
+        if field_name not in {f.name for f in dataclasses.fields(base)}:
+            raise KeyError(f"not a HardwareSpec field: {field_name}")
+        measured[field_name] = bench()
+    return base.with_calibration(**measured)

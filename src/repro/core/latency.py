@@ -1,0 +1,356 @@
+"""The analytical GEMM latency model — paper §IV, Algorithms 3-9, TPU-adapted.
+
+The paper decomposes GEMM latency into hierarchical compute and memory stages
+and scores a tiling candidate as
+
+    L_total = waves x ( prologue + epilogue + iters x max(L_compute, L_mem) )
+
+On TPU (see DESIGN.md §2) the same structure holds with these substitutions:
+
+* Alg. 3  (compute latency of a shared-memory tile)  ->  MXU-atom count of a
+  VMEM block, plus the VMEM<->VREG port term (the paper's "software managed
+  memory bandwidth bound").
+* Alg. 4  (active CUs / wave quantization)           ->  partial-block padding
+  waste within a core (ceil terms) + chip-level wave quantization used by the
+  distributed layer (`chip_waves`).
+* Alg. 5  (cache hit rate)                           ->  deterministic Pallas
+  *revisit* model: the HBM->VMEM copy is skipped when a block index repeats
+  between consecutive grid steps; otherwise HBM traffic is exact.
+* Alg. 7  (memory latency of a loop iteration)       ->  per-grid-step DMA
+  bytes / HBM bandwidth, plus the fixed DMA-issue cost (the "load/store issue
+  rate" axis) and first-byte latency at the prologue.
+* Alg. 8/9 (pipeline + total)                        ->  Pallas's grid pipeline
+  is continuous across output tiles, so total = launch + fill +
+  sum over grid steps of max(L_compute, L_mem) + drain.
+
+Everything is closed-form and O(1) per candidate — this is what makes
+selection O(P) instead of the autotuner's O(P·M·N·K) (paper §V-B).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.hardware import DTYPE_BYTES, HardwareSpec
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+@dataclass(frozen=True)
+class GemmProblem:
+    """C[M,N] = A[M,K] @ B[K,N], optionally batched (leading dim)."""
+
+    M: int
+    N: int
+    K: int
+    in_dtype: str = "bfloat16"
+    out_dtype: str = "float32"
+    batch: int = 1
+
+    def __post_init__(self):
+        if min(self.M, self.N, self.K, self.batch) < 1:
+            raise ValueError(f"degenerate GEMM problem {self}")
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.batch * self.M * self.N * self.K
+
+    @property
+    def min_bytes(self) -> float:
+        """Compulsory traffic: read A and B once, write C once."""
+        bi, bo = DTYPE_BYTES[self.in_dtype], DTYPE_BYTES[self.out_dtype]
+        return self.batch * ((self.M * self.K + self.K * self.N) * bi
+                             + self.M * self.N * bo)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.min_bytes
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """One point of the candidate space (the paper's tiling hierarchy knobs).
+
+    bm, bn, bk: the VMEM block (paper: workgroup/shared-memory tile).
+    split_k   : k-parallel partial-accumulation factor (Stream-K analogue).
+    group_m   : grouped grid-iteration order (paper: cache-tile factorization;
+                on TPU it controls which operand the revisit-skip applies to).
+    """
+
+    bm: int
+    bn: int
+    bk: int
+    split_k: int = 1
+    group_m: int = 1
+
+    def __str__(self) -> str:
+        s = f"{self.bm}x{self.bn}x{self.bk}"
+        if self.split_k > 1:
+            s += f"/sk{self.split_k}"
+        if self.group_m > 1:
+            s += f"/g{self.group_m}"
+        return s
+
+
+@dataclass(frozen=True)
+class LatencyBreakdown:
+    """Scored candidate with the paper's bottleneck taxonomy (§IV-D)."""
+
+    total: float                  # seconds
+    compute: float                # steady-state MXU term per step (summed)
+    vmem: float                   # VMEM<->VREG port term (summed)
+    hbm: float                    # HBM DMA term (summed)
+    issue: float                  # fixed DMA-issue term (summed)
+    fill_drain: float             # prologue + epilogue + launch
+    hbm_traffic: float            # exact bytes moved HBM<->VMEM
+    padded_flops: float           # FLOPs incl. MXU-atom padding
+    bottleneck: str               # one of BOTTLENECKS
+
+    @property
+    def efficiency(self) -> float:
+        """Fraction of total spent in useful MXU compute."""
+        return self.compute / self.total if self.total > 0 else 0.0
+
+
+BOTTLENECKS = (
+    "mxu_compute",        # paper: max-parallelism compute bound
+    "vmem_bandwidth",     # paper: software-managed memory bandwidth bound
+    "hbm_bandwidth",      # paper: cache/memory bandwidth bound
+    "dma_issue",          # paper: load/store issue rate bound
+    "pipeline_fill",      # paper: under-occupied compute bound
+)
+
+
+def grid_shape(p: GemmProblem, t: TileConfig) -> Tuple[int, int, int]:
+    """(Tm, Tn, Tk) grid; split_k multiplies Tk and divides the k extent."""
+    k_per_split = cdiv(p.K, t.split_k)
+    return cdiv(p.M, t.bm), cdiv(p.N, t.bn), cdiv(k_per_split, t.bk) * t.split_k
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 — compute latency of one VMEM block (per grid step).
+# ---------------------------------------------------------------------------
+
+def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+                         ) -> Tuple[float, float]:
+    """Returns (mxu_seconds, vmem_seconds) for one grid step.
+
+    MXU term: the block is consumed in ceil-padded MXU atoms (Alg. 3's
+    N_MI x L_MI, with L_MI expressed through peak FLOP/s).
+    VMEM term: bytes the step streams through the VMEM<->VREG port — both
+    input blocks once, plus the f32 accumulator read+write (the accumulator
+    lives in VMEM scratch across the k loop).
+    """
+    mm, mn, mk = hw.mxu_shape
+    n_atoms = cdiv(t.bm, mm) * cdiv(t.bn, mn) * cdiv(t.bk, mk)
+    atom_flops = 2.0 * mm * mn * mk
+    mxu = n_atoms * atom_flops / hw.flops(p.in_dtype)
+
+    bi = DTYPE_BYTES[p.in_dtype]
+    in_bytes = (t.bm * t.bk + t.bk * t.bn) * bi
+    acc_bytes = 2 * t.bm * t.bn * 4          # f32 accumulator read + write
+    vmem = (in_bytes + acc_bytes) / hw.vmem_bandwidth
+    return mxu, vmem
+
+
+# ---------------------------------------------------------------------------
+# Alg. 5 adaptation — deterministic revisit/locality model.
+# ---------------------------------------------------------------------------
+
+def revisit_fractions(p: GemmProblem, t: TileConfig) -> Tuple[float, float]:
+    """Fraction of grid steps at which the (A, B) block fetch is *skipped*.
+
+    Iteration order is (m outer, n middle, k inner) with group_m swizzling.
+    Pallas skips the HBM->VMEM copy when a block index is unchanged between
+    consecutive steps:
+
+    * A block index (i_m, i_k): unchanged iff k and m both unchanged — only
+      possible when Tk == 1 and we advance n within the same m.
+    * B block index (i_k, i_n): unchanged iff k and n both unchanged — only
+      possible when Tk == 1 and we advance m within a group (group_m > 1
+      walks m innermost within a group of rows).
+    """
+    Tm, Tn, Tk = grid_shape(p, t)
+    if Tk != 1:
+        return 0.0, 0.0
+    if t.group_m <= 1:
+        # n advances innermost: A revisited for Tn-1 of each row's Tn steps.
+        a_skip = (Tn - 1) / Tn if Tn > 0 else 0.0
+        return a_skip, 0.0
+    # grouped: m advances innermost within groups of size group_m.
+    g = min(t.group_m, Tm)
+    b_skip = (g - 1) / g
+    return 0.0, b_skip
+
+
+def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
+    """Exact HBM bytes for the whole GEMM under the revisit model.
+
+    Without revisits: A is fetched Tn times over, B Tm times over
+    (the paper's "uncached reads" U, Alg. 5, with hit rate applied).
+    """
+    Tm, Tn, Tk = grid_shape(p, t)
+    bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
+    a_skip, b_skip = revisit_fractions(p, t)
+    # Padded fetch sizes: DMA moves whole blocks (edge blocks move real bytes;
+    # we model the exact edge in the simulator, the mean here).
+    a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
+    b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
+    c_bytes = p.M * p.N * bo
+    if t.split_k > 1:
+        # Partials: split_k-1 extra f32 write+read+final read-modify-write.
+        c_bytes += 2.0 * (t.split_k - 1) * p.M * p.N * 4
+    return p.batch * (a_bytes + b_bytes + c_bytes)
+
+
+def reuse_fraction(p: GemmProblem, t: TileConfig) -> float:
+    """Paper Alg. 5's hit rate h in [0,1]: 1 - compulsory/actual traffic."""
+    actual = hbm_traffic(p, t)
+    return max(0.0, min(1.0, 1.0 - p.min_bytes / actual)) if actual else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Alg. 7 — memory latency of a loop iteration (per grid step, averaged).
+# ---------------------------------------------------------------------------
+
+def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+                        ) -> Tuple[float, float]:
+    """Returns (hbm_seconds, issue_seconds) averaged over grid steps.
+
+    Output writes are folded in amortized: each (m,n) tile writes bm*bn once
+    per Tk steps. The fixed DMA-issue cost is the paper's load/store
+    issue-rate axis.
+    """
+    Tm, Tn, Tk = grid_shape(p, t)
+    steps = Tm * Tn * Tk * p.batch
+    hbm = hbm_traffic(p, t) / hw.hbm_bandwidth / steps
+    return hbm, hw.dma_fixed
+
+
+# ---------------------------------------------------------------------------
+# Alg. 8 + 9 — pipeline + total latency (continuous grid pipeline).
+# ---------------------------------------------------------------------------
+
+def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+                 ) -> LatencyBreakdown:
+    Tm, Tn, Tk = grid_shape(p, t)
+    steps = Tm * Tn * Tk * p.batch
+
+    mxu_s, vmem_s = step_compute_latency(p, t, hw)
+    hbm_s, issue_s = step_memory_latency(p, t, hw)
+
+    compute_side = max(mxu_s, vmem_s)
+    memory_side = hbm_s + issue_s
+    l_iter = max(compute_side, memory_side)           # software pipeline
+
+    # Prologue: first block fetch cannot be hidden (paper Alg. 8 L_prologue);
+    # epilogue: final accumulator flush. Both once per *pipeline*, because the
+    # Pallas grid pipeline is continuous across output tiles.
+    bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
+    prologue = hw.hbm_latency + (t.bm * t.bk + t.bk * t.bn) * bi / hw.hbm_bandwidth
+    epilogue = hw.hbm_latency + t.bm * t.bn * bo / hw.hbm_bandwidth
+    fill_drain = hw.kernel_launch + prologue + epilogue
+
+    total = fill_drain + steps * l_iter
+
+    mm, mn, mk = hw.mxu_shape
+    padded_flops = (2.0 * p.batch
+                    * round_up(p.M, t.bm) * round_up(p.N, t.bn)
+                    * round_up(cdiv(p.K, t.split_k), t.bk) * t.split_k)
+    # ^ padding waste: ceil to blocks (blocks then ceil to atoms; blocks are
+    # atom-aligned by construction of the candidate space).
+
+    terms = {
+        "mxu_compute": steps * mxu_s,
+        "vmem_bandwidth": steps * vmem_s,
+        "hbm_bandwidth": steps * hbm_s,
+        "dma_issue": steps * issue_s,
+        "pipeline_fill": fill_drain,
+    }
+    bottleneck = max(terms, key=terms.get)
+
+    return LatencyBreakdown(
+        total=total,
+        compute=terms["mxu_compute"],
+        vmem=terms["vmem_bandwidth"],
+        hbm=terms["hbm_bandwidth"],
+        issue=terms["dma_issue"],
+        fill_drain=fill_drain,
+        hbm_traffic=hbm_traffic(p, t),
+        padded_flops=padded_flops,
+        bottleneck=bottleneck,
+    )
+
+
+def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
+    """Fast path of ``gemm_latency`` returning only total seconds.
+
+    Identical arithmetic, no dataclass allocation — used to rank the whole
+    candidate space in O(P) with per-candidate cost in the ~µs range (the
+    paper's selection-overhead claim, Table II)."""
+    bm, bn, bk = t.bm, t.bn, t.bk
+    Tm = -(-p.M // bm)
+    Tn = -(-p.N // bn)
+    k_per_split = -(-p.K // t.split_k)
+    Tk = -(-k_per_split // bk) * t.split_k
+    steps = Tm * Tn * Tk * p.batch
+
+    mm, mn, mk = hw.mxu_shape
+    n_atoms = (-(-bm // mm)) * (-(-bn // mn)) * (-(-bk // mk))
+    mxu_s = n_atoms * (2.0 * mm * mn * mk) / hw.flops(p.in_dtype)
+
+    bi = DTYPE_BYTES[p.in_dtype]
+    bo = DTYPE_BYTES[p.out_dtype]
+    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn) / hw.vmem_bandwidth
+
+    # revisit fractions (inlined)
+    if Tk != 1:
+        a_skip = b_skip = 0.0
+    elif t.group_m <= 1:
+        a_skip, b_skip = ((Tn - 1) / Tn if Tn else 0.0), 0.0
+    else:
+        g = min(t.group_m, Tm)
+        a_skip, b_skip = 0.0, (g - 1) / g
+    a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
+    b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
+    c_bytes = p.M * p.N * bo
+    if t.split_k > 1:
+        c_bytes += 2.0 * (t.split_k - 1) * p.M * p.N * 4
+    traffic = p.batch * (a_bytes + b_bytes + c_bytes)
+
+    hbm_s = traffic / hw.hbm_bandwidth / steps
+    l_iter = max(max(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
+    epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
+    return hw.kernel_launch + prologue + epilogue + steps * l_iter
+
+
+# ---------------------------------------------------------------------------
+# Alg. 4 — chip-level wave quantization (used by the distributed layer).
+# ---------------------------------------------------------------------------
+
+def chip_waves(p: GemmProblem, t: TileConfig, n_chips: int
+               ) -> Tuple[int, int]:
+    """(active_chips_last_wave, n_waves) when output tiles are spread over
+    chips — the paper's Alg. 4 verbatim, with CUs -> chips."""
+    Tm, Tn, _ = grid_shape(p, t)
+    tiles = Tm * Tn * p.batch
+    waves = cdiv(tiles, n_chips)
+    active = tiles % n_chips or n_chips
+    return active, waves
+
+
+def vmem_working_set(t: TileConfig, in_dtype: str, hw: HardwareSpec) -> int:
+    """Bytes of VMEM a kernel instance claims: pipeline_depth-buffered input
+    blocks + one f32 accumulator block (the paper's LDS-capacity filter)."""
+    bi = DTYPE_BYTES[in_dtype]
+    inputs = hw.pipeline_depth * (t.bm * t.bk + t.bk * t.bn) * bi
+    acc = t.bm * t.bn * 4
+    return inputs + acc

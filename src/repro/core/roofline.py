@@ -1,0 +1,145 @@
+"""Three-term roofline analysis for compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs       / (chips x peak FLOP/s)
+    memory term     = HLO_bytes       / (chips x HBM bandwidth)
+    collective term = collective_bytes / (chips x ICI link bandwidth)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed out of the HLO text (``parse_collective_bytes``) because XLA's cost
+model does not expose them.  Constants default to the mandated v5e numbers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.hardware import TPU_V5E, HardwareSpec
+
+# HLO shapes look like  bf16[4096,512]{1,0:T(8,128)}  or tuples thereof.
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|"
+                       r"u32|u16|u8|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f16": 2, "bf16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of every typed shape literal in `text`."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in a *partitioned* HLO
+    module dump (per-device bytes, matching cost_analysis granularity).
+
+    Instruction lines look like
+        %all-reduce.1 = f32[256,1024]{1,0} all-reduce(%dot), ...
+    — the shape sits between '=' and the op name (careful: the instruction
+    *name* also contains the op string, so we anchor on ``= <shape> <op>(``).
+    `-start` variants counted once, `-done` skipped.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLLECTIVES:
+            m = re.search(rf"=\s+(.*?)\s+{kind}(-start)?\(", s)
+            if m:
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass(frozen=True)
+class RooflineReport:
+    arch: str
+    shape_name: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float            # 6*N*D (dense) / 6*N_active*D (MoE)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_flop_ratio: float      # MODEL_FLOPS / HLO_FLOPs
+    roofline_s: float             # max of the three terms
+    collectives: Mapping[str, float]
+
+    def as_dict(self) -> Dict:
+        d = asdict(self)
+        d["collectives"] = dict(self.collectives)
+        return d
+
+
+def roofline(
+    *,
+    arch: str,
+    shape_name: str,
+    mesh: str,
+    chips: int,
+    hlo_flops: float,          # PER-DEVICE (cost_analysis of the
+    hlo_bytes: float,          # partitioned module)
+    collectives: Mapping[str, float],   # PER-DEVICE result bytes
+    model_flops: float,        # GLOBAL 6·N·D — divided by chips here
+    hw: HardwareSpec = TPU_V5E,
+    dtype: str = "bfloat16",
+) -> RooflineReport:
+    """Three roofline terms on a per-chip basis.
+
+    cost_analysis / the HLO dump describe ONE partition, so the terms are
+      compute    = flops_dev / peak        (== HLO_FLOPs/(chips·peak) global)
+      memory     = bytes_dev / HBM_bw
+      collective = coll_bytes_dev / link_bw   (one ~50GB/s ICI link; ring
+                   all-reduce wire bytes ≈ 2x result size — folded in)
+    """
+    compute_s = hlo_flops / hw.flops(dtype)
+    memory_s = hlo_bytes / hw.hbm_bandwidth
+    coll_bytes = float(collectives.get("total", 0.0))
+    wire = (2.0 * float(collectives.get("all-reduce", 0.0))
+            + sum(float(collectives.get(k, 0.0))
+                  for k in _COLLECTIVES if k != "all-reduce"))
+    collective_s = wire / hw.ici_bandwidth
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    model_flops_dev = model_flops / max(chips, 1)
+    return RooflineReport(
+        arch=arch, shape_name=shape_name, mesh=mesh, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=coll_bytes, model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_flop_ratio=(model_flops_dev / hlo_flops) if hlo_flops else 0.0,
+        roofline_s=max(terms.values()),
+        collectives=dict(collectives),
+    )
+
+
+def cost_analysis_terms(compiled) -> Tuple[float, float]:
+    """Extract (flops, bytes accessed) from a compiled executable.
+
+    ``cost_analysis()`` returns a dict (newer jax) or [dict]."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    # XLA reports "bytes accessed" plus per-space breakdowns.
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    return flops, bytes_accessed

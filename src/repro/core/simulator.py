@@ -1,0 +1,194 @@
+"""Event-level Pallas-grid simulator — independent ground truth for Fig. 3.
+
+The selection-efficiency benchmark (paper §V-A) needs a "measured" latency per
+candidate that the selector did NOT use to rank.  On GPU the paper measures
+wall clock; in this CPU container we substitute this simulator, which models
+the machine at a strictly finer granularity than the closed-form model in
+``latency.py``:
+
+* exact edge-block DMA bytes (Pallas fetches the real slice; compute always
+  runs the full padded block),
+* exact revisit skips at tile boundaries in the true grid iteration order
+  (grouped or row-major, k innermost),
+* an explicit two-stage max-plus pipeline recurrence with finite buffer depth
+  (``hw.pipeline_depth``), not a steady-state max(),
+* output writebacks serialized on the same DMA engine as input fetches,
+* split-K partial buffers plus the f32 combine pass.
+
+It shares nothing with ``latency.py`` but the HardwareSpec constants.
+
+Per-tile O(1) fast path: within one output tile's k-loop, fetch and compute
+times are constant (edges depend on (m, n) only; no revisit while k varies),
+so the pipeline recurrence settles to a linear regime after a few steps.  We
+simulate the first ``_EXPLICIT`` steps of each tile exactly and extend by the
+settled slope — this keeps the simulator exact while making whole-sweep
+benchmarks tractable on CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Tuple
+
+from repro.core.hardware import DTYPE_BYTES, HardwareSpec
+from repro.core.latency import GemmProblem, TileConfig, cdiv
+
+_EXPLICIT = 3  # pipeline steps simulated exactly at each tile start
+
+
+@dataclass(frozen=True)
+class SimResult:
+    time: float          # seconds, end-to-end kernel latency
+    hbm_bytes: float     # exact bytes moved over HBM
+    mxu_busy: float      # seconds the MXU was computing
+    steps: int
+
+    @property
+    def tflops(self) -> float:          # filled by caller via problem
+        raise AttributeError("use problem.flops / result.time")
+
+
+def _tile_order(Tm: int, Tn: int, group_m: int) -> Iterator[Tuple[int, int]]:
+    """The kernel's (m, n) iteration order: row-major, or grouped rows with m
+    innermost inside each group (Triton's grouped ordering)."""
+    if group_m <= 1:
+        for i in range(Tm):
+            for j in range(Tn):
+                yield i, j
+        return
+    g = group_m
+    for i0 in range(0, Tm, g):
+        hi = min(i0 + g, Tm)
+        for j in range(Tn):
+            for i in range(i0, hi):
+                yield i, j
+
+
+def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
+    bi = DTYPE_BYTES[p.in_dtype]
+    bo = DTYPE_BYTES[p.out_dtype]
+    mm, mn, mk = hw.mxu_shape
+    bw = hw.hbm_bandwidth
+
+    k_extent = cdiv(p.K, t.split_k)           # k span per split
+    Tm, Tn = cdiv(p.M, t.bm), cdiv(p.N, t.bn)
+    Tk = cdiv(k_extent, t.bk)
+
+    # Full-block compute time: Pallas pads edge blocks in VMEM, the MXU always
+    # chews the full (bm, bn, bk) block; VMEM port moves block + accumulator.
+    atoms = cdiv(t.bm, mm) * cdiv(t.bn, mn) * cdiv(t.bk, mk)
+    ct_mxu = atoms * (2.0 * mm * mn * mk) / hw.flops(p.in_dtype)
+    ct_vmem = ((t.bm * t.bk + t.bk * t.bn) * bi + 2 * t.bm * t.bn * 4) \
+        / hw.vmem_bandwidth
+    ct = max(ct_mxu, ct_vmem)
+
+    # Pipeline state.
+    depth = hw.pipeline_depth
+    dma_cursor = hw.kernel_launch + hw.hbm_latency   # DMA engine free-time
+    comp_hist: List[float] = []                      # compute end times (ring)
+    comp_cursor = 0.0
+    total_bytes = 0.0
+    mxu_busy = 0.0
+    n_steps = 0
+
+    def run_step(fetch_bytes: float) -> None:
+        nonlocal dma_cursor, comp_cursor, total_bytes, mxu_busy, n_steps
+        # DMA may start once its target buffer was drained `depth` steps ago.
+        gate = comp_hist[-depth] if len(comp_hist) >= depth else 0.0
+        if fetch_bytes > 0:
+            dma_start = max(dma_cursor, gate)
+            dma_cursor = dma_start + fetch_bytes / bw + hw.dma_fixed
+            ready = dma_cursor
+        else:
+            ready = gate                              # fully revisited step
+        comp_cursor = max(comp_cursor, ready) + ct
+        comp_hist.append(comp_cursor)
+        if len(comp_hist) > depth + 1:
+            del comp_hist[0]
+        total_bytes += fetch_bytes
+        mxu_busy += ct
+        n_steps += 1
+
+    def write_back(bytes_: float) -> None:
+        nonlocal dma_cursor, total_bytes
+        start = max(dma_cursor, comp_cursor)
+        dma_cursor = start + bytes_ / bw + hw.dma_fixed
+        total_bytes += bytes_
+
+    for _ in range(p.batch):
+        for s in range(t.split_k):
+            k_lo = s * k_extent
+            k_hi = min(p.K, (s + 1) * k_extent)
+            prev_a = prev_b = None
+            for (i, j) in _tile_order(Tm, Tn, t.group_m):
+                em = min(t.bm, p.M - i * t.bm)        # real edge extents
+                en = min(t.bn, p.N - j * t.bn)
+                # Per-step fetch bytes within this tile (constant over k).
+                steps_here = Tk
+                first_fetches: List[float] = []
+                for kk in range(min(steps_here, _EXPLICIT)):
+                    ek = min(t.bk, (k_hi - k_lo) - kk * t.bk)
+                    a_idx, b_idx = (i, s, kk), (s, kk, j)
+                    fa = 0.0 if a_idx == prev_a else em * ek * bi
+                    fb = 0.0 if b_idx == prev_b else ek * en * bi
+                    prev_a, prev_b = a_idx, b_idx
+                    first_fetches.append(fa + fb)
+                for f in first_fetches:
+                    run_step(f)
+                rest = steps_here - len(first_fetches)
+                if rest > 0:
+                    # Settled linear regime: constant fetch (interior k) and
+                    # constant compute -> both cursors advance by the slope.
+                    ek = t.bk if (k_hi - k_lo) % t.bk == 0 else t.bk
+                    f = (em * t.bk + t.bk * en) * bi
+                    # last k block may be ragged; simulate it explicitly
+                    ragged = (k_hi - k_lo) % t.bk
+                    bulk = rest - (1 if ragged else 0)
+                    if bulk > 0:
+                        slope = max(f / bw + hw.dma_fixed, ct)
+                        dma_cursor += bulk * (f / bw + hw.dma_fixed)
+                        comp_cursor = max(comp_cursor + bulk * ct,
+                                          dma_cursor + ct)
+                        comp_cursor = max(comp_cursor,
+                                          (comp_hist[-1] if comp_hist else 0)
+                                          + bulk * slope)
+                        comp_hist.append(comp_cursor)
+                        if len(comp_hist) > depth + 1:
+                            del comp_hist[0]
+                        total_bytes += bulk * f
+                        mxu_busy += bulk * ct
+                        n_steps += bulk
+                        prev_a = (i, s, steps_here - (2 if ragged else 1))
+                        prev_b = (s, steps_here - (2 if ragged else 1), j)
+                    if ragged:
+                        ek = ragged
+                        a_idx = (i, s, steps_here - 1)
+                        b_idx = (s, steps_here - 1, j)
+                        fa = em * ek * bi
+                        fb = ek * en * bi
+                        prev_a, prev_b = a_idx, b_idx
+                        run_step(fa + fb)
+                # Accumulator flush for this output tile.
+                wb = em * en * (4 if t.split_k > 1 else bo)
+                write_back(wb)
+
+    if t.split_k > 1:
+        # Combine pass: read split_k f32 partials, write final out_dtype.
+        rd = t.split_k * p.M * p.N * 4 * p.batch
+        wr = p.M * p.N * bo * p.batch
+        write_back(rd + wr)
+        comp_cursor = max(comp_cursor, dma_cursor) + hw.kernel_launch
+
+    end = max(comp_cursor, dma_cursor)
+    return SimResult(time=end, hbm_bytes=total_bytes,
+                     mxu_busy=mxu_busy, steps=n_steps)
+
+
+def exhaustive_best(p: GemmProblem, hw: HardwareSpec,
+                    candidates) -> Tuple[TileConfig, SimResult]:
+    """The autotuner stand-in: simulate every candidate, return the argmin."""
+    best_t, best_r = None, None
+    for t in candidates:
+        r = simulate_gemm(p, t, hw)
+        if best_r is None or r.time < best_r.time:
+            best_t, best_r = t, r
+    return best_t, best_r

@@ -1,0 +1,96 @@
+"""Deterministic synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, host) — restart-safe by
+construction (checkpoint restore resumes the stream exactly), sharded per
+host, with a background prefetch thread.  Token draws follow a power-law
+over the vocab (Zipf-ish) so the loss curve behaves like language rather
+than uniform noise.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    skew: float = 3.0            # power-law exponent for token frequencies
+
+
+class SyntheticLM:
+    """Host-sharded deterministic token stream."""
+
+    def __init__(self, cfg: DataConfig,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
+        self.cfg = cfg
+        self.pi = (jax.process_index() if process_index is None
+                   else process_index)
+        self.pc = (jax.process_count() if process_count is None
+                   else process_count)
+        assert cfg.global_batch % self.pc == 0, (cfg.global_batch, self.pc)
+        self.local_batch = cfg.global_batch // self.pc
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """The (deterministic) local batch for a given global step."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.uint64(hash((c.seed, int(step), self.pi)) & 0x7FFFFFFFFFFFFFF))
+        u = rng.random((self.local_batch, c.seq_len))
+        tokens = np.floor((u ** c.skew) * c.vocab_size).astype(np.int32)
+        # Inject structure: short repeated motifs so the LM has signal.
+        motif = rng.integers(0, c.vocab_size, size=(8,), dtype=np.int32)
+        pos = rng.integers(0, max(1, c.seq_len - 8))
+        tokens[:, pos:pos + 8] = motif
+        return {"tokens": tokens}
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-N) over any batch iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+            self.q.put(None)
+
+        self.t = threading.Thread(target=worker, daemon=True)
+        self.t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

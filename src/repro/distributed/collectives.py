@@ -1,0 +1,100 @@
+"""Mesh-level applications of the analytical model (beyond-paper extension).
+
+The paper scopes itself to one GPU (§III-A Non-Goals).  We extend its
+max(compute, data-movement) scoring with ICI terms to *rank sharding
+layouts* for a GEMM on the production mesh — the same zero-autotune
+decision procedure, one level up the hierarchy:
+
+    per-chip GEMM latency (paper model)  vs  collective latency (ring model)
+
+``tp_matmul`` is the deployment shape for the Pallas kernel under TP: a
+shard_map whose *local* shapes feed the selector (per-chip-optimal tiles)
+followed by the psum the layout chooser priced.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.latency import GemmProblem
+from repro.core.selector import select_gemm_config
+from repro.kernels import ops as kops
+
+
+def ring_all_reduce_s(nbytes: float, n: int, hw: HardwareSpec) -> float:
+    """Bidirectional-ring all-reduce time: 2(n-1)/n * bytes / link_bw."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * nbytes / hw.ici_bandwidth
+
+
+def ring_all_gather_s(nbytes_local: float, n: int, hw: HardwareSpec) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) * nbytes_local / hw.ici_bandwidth
+
+
+@dataclass(frozen=True)
+class LayoutChoice:
+    layout: str            # "dp" | "tp_n" | "tp_k" | "replicated"
+    predicted_s: float
+    per_chip: Tuple[int, int, int]
+    collective_s: float
+
+
+def choose_gemm_layout(M: int, N: int, K: int, n_chips: int,
+                       in_dtype: str = "bfloat16",
+                       hw: HardwareSpec = TPU_V5E) -> LayoutChoice:
+    """Rank {row-shard M (DP), col-shard N (TP-n), shard K (TP-k + psum)}
+    with the paper's per-chip latency model + ring collective terms."""
+    b = DTYPE_BYTES[in_dtype]
+    cands = []
+    if M % n_chips == 0:
+        sel = select_gemm_config(M // n_chips, N, K, in_dtype=in_dtype, hw=hw)
+        cands.append(LayoutChoice("dp", sel.predicted.total,
+                                  (M // n_chips, N, K), 0.0))
+    if N % n_chips == 0:
+        sel = select_gemm_config(M, N // n_chips, K, in_dtype=in_dtype, hw=hw)
+        cands.append(LayoutChoice("tp_n", sel.predicted.total,
+                                  (M, N // n_chips, K), 0.0))
+    if K % n_chips == 0:
+        sel = select_gemm_config(M, N, K // n_chips, in_dtype=in_dtype, hw=hw)
+        coll = ring_all_reduce_s(M * N * 4.0, n_chips, hw)
+        cands.append(LayoutChoice(
+            "tp_k", sel.predicted.total + coll, (M, N, K // n_chips), coll))
+    if not cands:
+        sel = select_gemm_config(M, N, K, in_dtype=in_dtype, hw=hw)
+        cands.append(LayoutChoice("replicated", sel.predicted.total,
+                                  (M, N, K), 0.0))
+    return min(cands, key=lambda c: c.predicted_s)
+
+
+def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "model",
+              *, reduce_k: bool = False, backend: Optional[str] = None
+              ) -> jax.Array:
+    """Tensor-parallel GEMM via shard_map: the selector sees LOCAL shapes.
+
+    reduce_k=False: w column-sharded (D, F/axis) -> output sharded on F.
+    reduce_k=True : w row-sharded (D/axis, F), x sharded on D -> psum."""
+    if reduce_k:
+        in_specs = (P(None, axis), P(axis, None))
+        out_spec = P(None, None)
+
+        def f(xl, wl):
+            y = kops.matmul(xl, wl, backend=backend, out_dtype=jnp.float32)
+            return jax.lax.psum(y, axis)
+    else:
+        in_specs = (P(None, None), P(None, axis))
+        out_spec = P(None, axis)
+
+        def f(xl, wl):
+            return kops.matmul(xl, wl, backend=backend)
+
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_spec)(x, w)

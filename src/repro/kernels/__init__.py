@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots + selector-driven ops."""
+from repro.kernels.ops import (
+    flash_attention,
+    get_backend,
+    matmul,
+    set_backend,
+)
+from repro.kernels.flash_attention import select_attention_blocks
+
+__all__ = ["flash_attention", "get_backend", "matmul", "set_backend",
+           "select_attention_blocks"]

@@ -1,0 +1,127 @@
+"""Pallas TPU GEMM kernel, parameterized by the analytical selector's config.
+
+This is the tritonBLAS kernel ported to the TPU execution model: one kernel
+template whose BlockSpec tiling (bm, bn, bk), grid iteration order (grouped
+row swizzle) and split-K factor are *runtime parameters chosen analytically*
+— never autotuned.
+
+Grid layout: ``(num_output_tiles, Tk)`` with k innermost (the Pallas grid is
+iterated row-major, last dim fastest), so the f32 accumulator scratch carries
+across the k loop and flushes on the last k step.  The grouped iteration
+order (paper Alg. 6's cache-tile factorization; on TPU it selects which
+operand benefits from the Mosaic revisit-skip) is folded into the index maps.
+
+Inputs must be pre-padded to block multiples — ``ops.matmul`` does this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.latency import TileConfig, cdiv
+
+
+def _swizzle(pid, Tm: int, Tn: int, group_m: int):
+    """Flattened tile id -> (pid_m, pid_n) under grouped iteration order."""
+    if group_m <= 1:
+        return pid // Tn, pid % Tn
+    group_size = group_m * Tn
+    gid = pid // group_size
+    first_m = gid * group_m
+    rows = jnp.minimum(Tm - first_m, group_m)   # ragged final group
+    local = pid % group_size
+    pid_m = first_m + local % rows
+    pid_n = local // rows
+    return pid_m, pid_n
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    config: TileConfig,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B with A:(M,K), B:(K,N) already padded to block multiples."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = config.bm, config.bn, config.bk
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"inputs must be padded to blocks: {(M, N, K)} vs {config}")
+    Tm, Tn, Tk = M // bm, N // bn, K // bk
+    gm = config.group_m
+
+    def a_index(pid, k):
+        pid_m, _ = _swizzle(pid, Tm, Tn, gm)
+        return pid_m, k
+
+    def b_index(pid, k):
+        _, pid_n = _swizzle(pid, Tm, Tn, gm)
+        return k, pid_n
+
+    def o_index(pid, k):
+        pid_m, pid_n = _swizzle(pid, Tm, Tn, gm)
+        return pid_m, pid_n
+
+    kernel = functools.partial(_matmul_kernel, n_k=Tk, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(Tm * Tn, Tk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), a_index),
+            pl.BlockSpec((bk, bn), b_index),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), o_index),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def matmul_split_k(
+    a: jax.Array,
+    b: jax.Array,
+    config: TileConfig,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Split-K variant (the paper's Stream-K analogue for small M*N grids):
+    partials over k-shards computed by a vmapped kernel, combined in f32."""
+    sk = config.split_k
+    M, K = a.shape
+    _, N = b.shape
+    assert K % sk == 0, (K, sk)
+    a_s = a.reshape(M, sk, K // sk).swapaxes(0, 1)          # (sk, M, K/sk)
+    b_s = b.reshape(sk, K // sk, N)                          # (sk, K/sk, N)
+    inner = functools.partial(
+        matmul_pallas,
+        config=TileConfig(bm=config.bm, bn=config.bn, bk=config.bk,
+                          split_k=1, group_m=config.group_m),
+        out_dtype=jnp.float32,
+        interpret=interpret,
+    )
+    partials = jax.vmap(lambda x, y: inner(x, y))(a_s, b_s)  # (sk, M, N) f32
+    return jnp.sum(partials, axis=0).astype(out_dtype)

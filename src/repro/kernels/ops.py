@@ -1,0 +1,149 @@
+"""Public kernel ops: selector-driven, backend-switchable, jit-friendly.
+
+Backends
+--------
+``pallas``            real Mosaic lowering (TPU runtime)
+``pallas_interpret``  kernel body executed in Python on CPU (tests/validation)
+``reference``         pure-jnp oracle with identical semantics — used by the
+                      multi-pod dry-run (Mosaic cannot lower for the CPU
+                      platform) and as the default on CPU hosts; its FLOP and
+                      byte counts match the kernel algorithm, which is what
+                      the roofline reads.
+
+Selection happens at *trace time* from static shapes via
+``repro.core.select_gemm_config`` — the tritonBLAS contract: zero autotuning,
+deterministic, memoised.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import TPU_V5E, HardwareSpec
+from repro.core.latency import TileConfig, cdiv
+from repro.core.selector import select_gemm_config
+from repro.kernels import ref
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    select_attention_blocks,
+)
+from repro.kernels.matmul import matmul_pallas, matmul_split_k
+
+_BACKENDS = ("pallas", "pallas_interpret", "reference")
+_backend_override: Optional[str] = None
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Force a kernel backend globally (None -> auto)."""
+    global _backend_override
+    if name is not None and name not in _BACKENDS:
+        raise ValueError(f"backend {name!r} not in {_BACKENDS}")
+    _backend_override = name
+
+
+def get_backend() -> str:
+    if _backend_override is not None:
+        return _backend_override
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in _BACKENDS:
+            raise ValueError(f"REPRO_KERNEL_BACKEND={env!r} not in {_BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _dtype_name(x) -> str:
+    return jnp.dtype(x).name
+
+
+def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm, pn = (-x.shape[-2]) % m, (-x.shape[-1]) % n
+    if pm or pn:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)])
+    return x
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+    hw: HardwareSpec = TPU_V5E,
+    config: Optional[TileConfig] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Selector-driven GEMM. a: (..., M, K) [leading dims folded], b: (K, N).
+
+    The analytical selection uses the *local* (per-shard) static shapes, so
+    calling this under shard_map gives per-chip-optimal tiles — the intended
+    deployment (see distributed.collectives.tp_matmul).
+    """
+    be = backend or get_backend()
+    out_dtype = out_dtype or a.dtype
+    lead = a.shape[:-2] if a.ndim > 2 else ()
+    M = 1
+    for s in (*lead, a.shape[-2]):
+        M *= s
+    K, N = b.shape
+    a2 = a.reshape(M, K)
+
+    if be == "reference":
+        out = ref.matmul_ref(a2, b, out_dtype=out_dtype)
+        return out.reshape(*lead, a.shape[-2], N) if lead else out
+
+    if config is None:
+        sel = select_gemm_config(M, N, K,
+                                 in_dtype=_dtype_name(a.dtype),
+                                 out_dtype=_dtype_name(out_dtype)
+                                 if jnp.dtype(out_dtype) == jnp.float32
+                                 else "float32",
+                                 hw=hw)
+        config = sel.config
+    interpret = be == "pallas_interpret"
+
+    sk = config.split_k
+    a_p = _pad2(a2, config.bm, config.bk * sk)
+    b_p = _pad2(b, config.bk * sk, config.bn)
+    if sk > 1:
+        out = matmul_split_k(a_p, b_p, config, out_dtype=out_dtype,
+                             interpret=interpret)
+    else:
+        out = matmul_pallas(a_p, b_p, config, out_dtype=out_dtype,
+                            interpret=interpret)
+    out = out[:M, :N]
+    return out.reshape(*lead, a.shape[-2], N) if lead else out
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    hw: HardwareSpec = TPU_V5E,
+    blocks: Optional[Tuple[int, int]] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Selector-driven attention. q: (B,H,Sq,d), k/v: (B,Hkv,Skv,d)."""
+    be = backend or get_backend()
+    if be == "reference":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+    B, H, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if blocks is None:
+        blocks = select_attention_blocks(
+            Sq, Skv, d, in_dtype=_dtype_name(q.dtype), hw=hw, causal=causal)
+    bq, bkv = blocks
+    bq, bkv = min(bq, max(128, Sq)), min(bkv, max(128, Skv))
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, (-Sq) % bq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, (-Skv) % bkv), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, (-Skv) % bkv), (0, 0)))
+    out = flash_attention_pallas(
+        q_p, k_p, v_p, block_q=bq, block_kv=bkv, causal=causal, scale=scale,
+        q_len=Sq, kv_len=Skv, interpret=(be == "pallas_interpret"))
+    return out[:, :, :Sq, :]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B. a: (..., M, K), b: (K, N).
+
+    For bf16 outputs the dot's preferred_element_type is bf16: the MXU still
+    accumulates in f32 internally, but TP partial sums then cross the ICI in
+    bf16 — halving the row-parallel all-reduce wire bytes (EXPERIMENTS.md
+    §Perf).  Other outputs keep explicit f32 accumulation."""
+    if jnp.dtype(out_dtype) == jnp.bfloat16:
+        return jnp.matmul(a, b, preferred_element_type=jnp.bfloat16)
+    return jnp.matmul(a, b,
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
+) -> jax.Array:
+    """Dense softmax attention oracle with GQA head-group broadcast.
+
+    q: (B, H, Sq, d); k, v: (B, Hkv, Skv, d). Returns (B, H, Sq, d).
+    """
+    B, H, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(Skv)[None, :] < kv_len)
+    if causal:
+        mask = mask & (jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :])
+    s = jnp.where(mask, s, float("-inf"))
+    # Guard fully-masked rows (padding queries): softmax of all -inf -> 0.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom > 0, denom, 1.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,219 @@
+"""Analytic per-device memory estimates (no compile, no devices).
+
+The CPU XLA backend inflates ``memory_analysis().temp_size_in_bytes`` for
+remat-under-scan modules (it materializes f32 copies of the bf16 residual
+stash — jaxpr-level residuals are bf16; see EXPERIMENTS.md §Dry-run).  This
+module computes the exact JAX-level per-device footprint from the sharding
+rules alone:
+
+    params + optimizer (m, v) + gradient transient + remat layer stash
+    + decode/prefill caches
+
+so the "does it fit 16 GB HBM" question is answered from ground truth.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH_AXES, SEQ_AXES, rules_for, spec_for
+from repro.nn.config import ModelConfig, ShapeSpec
+from repro.nn.model import Model
+
+
+@dataclass(frozen=True)
+class FakeMesh:
+    """Duck-typed stand-in for jax Mesh: only .shape is consulted by
+    spec_for, so memory estimation needs no devices at all."""
+    shape: Dict[str, int]
+
+
+def _bytes(shape, dtype) -> int:
+    return int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+
+
+def _shard_factor(spec, mesh: FakeMesh) -> int:
+    f = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in (part if isinstance(part, tuple) else (part,)):
+            f *= mesh.shape[ax]
+    return f
+
+
+def _tree_device_bytes(abstract, axes, rules, mesh: FakeMesh) -> int:
+    total = 0
+    leaves = jax.tree_util.tree_leaves(abstract)
+    axleaves = jax.tree_util.tree_flatten(
+        axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    for a, ax in zip(leaves, axleaves):
+        spec = spec_for(a.shape, ax, rules, mesh)
+        total += _bytes(a.shape, a.dtype) // _shard_factor(spec, mesh)
+    return total
+
+
+def estimate_cell_memory(cfg: ModelConfig, shape: ShapeSpec,
+                         mesh_shape: Optional[Dict[str, int]] = None
+                         ) -> Dict[str, float]:
+    """Per-device GiB by category for one (arch, shape, mesh) cell."""
+    mesh = FakeMesh(mesh_shape or {"data": 16, "model": 16})
+    chips = int(np.prod(list(mesh.shape.values())))
+    model = Model(cfg)
+    rules = rules_for(cfg)
+    abst = model.abstract_params()
+    axes = model.param_axes()
+
+    out: Dict[str, float] = {}
+    params_dev = _tree_device_bytes(abst, axes, rules, mesh)
+    out["params"] = params_dev
+
+    batch_axes = [a for a in BATCH_AXES if a in mesh.shape]
+    bt = int(np.prod([mesh.shape[a] for a in batch_axes])) or 1
+    b_loc = shape.global_batch // bt if shape.global_batch % bt == 0 \
+        else shape.global_batch
+
+    if shape.kind == "train":
+        out["optimizer_m_v"] = 2 * params_dev * 2      # f32 vs bf16 params
+        out["gradients"] = params_dev
+        # remat stash: one carry per scanned layer (bf16 hidden state)
+        n_iters = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_iters = cfg.num_layers // cfg.shared_attn_every \
+                + cfg.num_layers % cfg.shared_attn_every
+        out["remat_stash"] = n_iters * b_loc * shape.seq_len \
+            * cfg.d_model * 2
+        # largest transient: one layer's activations (~4x hidden) + loss chunk
+        out["transient_est"] = 8 * b_loc * shape.seq_len * cfg.d_model * 2
+    else:
+        cache = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_dev = 0
+        for path, s in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            # mirror distributed.sharding.cache_shardings factors
+            f = 1
+            B = s.shape[1]
+            used = []
+            if batch_axes and B % bt == 0:
+                f *= bt
+                used = list(batch_axes)
+            if name in ("k", "v"):
+                seq_axes = [a for a in SEQ_AXES
+                            if a in mesh.shape and a not in used]
+                st = int(np.prod([mesh.shape[a] for a in seq_axes])) or 1
+                if seq_axes and s.shape[3] % st == 0:
+                    f *= st
+            elif "model" in mesh.shape and "model" not in used:
+                m = mesh.shape["model"]
+                if any(d % m == 0 for d in s.shape[2:]):
+                    f *= m
+            cache_dev += _bytes(s.shape, s.dtype) // f
+        out["kv_or_state_cache"] = cache_dev
+        out["transient_est"] = 4 * b_loc * max(1, shape.seq_len
+                                               if shape.kind == "prefill"
+                                               else 1) * cfg.d_model * 2
+
+    out = {k: v / 2**30 for k, v in out.items()}
+    out["total_gib"] = sum(out.values())
+    out["chips"] = chips
+    out["fits_16gib_hbm"] = out["total_gib"] <= 16.0
+    return out
+
+
+def estimate_step_hbm_bytes(cfg: ModelConfig, shape: ShapeSpec,
+                            mesh_shape: Optional[Dict[str, int]] = None,
+                            microbatches: int = 1) -> Dict[str, float]:
+    """Fusion-aware per-device HBM traffic model for one step (roofline
+    memory term).
+
+    XLA:CPU's `cost_analysis()["bytes accessed"]` sums operand/result bytes
+    of every *instruction*; the CPU pipeline barely fuses, so elementwise
+    chains (norms, softmax, rope) count 10-30x the traffic a fused TPU
+    program moves.  This model counts only fusion-boundary traffic:
+      weights (x3: fwd + remat + bwd), remat stash (write + read),
+      per-layer activation materializations (~8 hidden-sized tensors x3
+      passes), flash-attention KV refetch (nq x (K+V)), loss logits chunks,
+      optimizer state (m,v read+write f32 + param update), caches.
+    Returns a breakdown dict with "total" in bytes.
+    """
+    mesh = FakeMesh(mesh_shape or {"data": 16, "model": 16})
+    model = Model(cfg)
+    rules = rules_for(cfg)
+    params_dev = _tree_device_bytes(model.abstract_params(),
+                                    model.param_axes(), rules, mesh)
+    batch_axes = [a for a in BATCH_AXES if a in mesh.shape]
+    bt = int(np.prod([mesh.shape[a] for a in batch_axes])) or 1
+    b_loc = shape.global_batch // bt if shape.global_batch % bt == 0 \
+        else shape.global_batch
+    tp = mesh.shape.get("model", 1)
+    D, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    S = shape.seq_len
+    hid = b_loc * S * D * 2                       # one bf16 hidden tensor
+
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        # gathered weights are read fwd + remat + bwd (bf16)
+        out["weights"] = 3.0 * params_dev * (2 if cfg.fsdp else 1)
+        n_iters = L if cfg.family != "hybrid" else \
+            L // cfg.shared_attn_every + L % cfg.shared_attn_every
+        out["remat_stash"] = 2.0 * n_iters * hid   # write + read (sum over
+        # microbatches: per-microstep stash is hid/mb, times mb steps)
+        out["layer_activations"] = 8.0 * n_iters * hid * 3
+        if cfg.num_heads:
+            Hl = max(1, cfg.num_heads // tp)
+            nq = max(1, S // 512)
+            kv = b_loc * S * Hl * cfg.head_dim * 2
+            out["attention_kv_refetch"] = 3.0 * L * nq * 2 * kv \
+                if cfg.family not in ("ssm",) else 0.0
+        out["logits"] = 3.0 * b_loc * S * (V // tp) * 4
+        out["optimizer"] = 2 * (params_dev * 2) * 2 + 4 * params_dev
+        out["gradients"] = 2.0 * params_dev
+    elif shape.kind == "prefill":
+        out["weights"] = params_dev * (2 if cfg.fsdp else 1)
+        out["layer_activations"] = 8.0 * L * hid
+        if cfg.num_heads:
+            Hl = max(1, cfg.num_heads // tp)
+            nq = max(1, S // 512)
+            kv = b_loc * S * Hl * cfg.head_dim * 2
+            out["attention_kv_refetch"] = L * nq * 2 * kv \
+                if cfg.family not in ("ssm",) else 0.0
+        est = estimate_cell_memory(cfg, shape, mesh_shape)
+        out["cache_write"] = est["kv_or_state_cache"] * 2**30
+        out["logits"] = b_loc * (V // tp) * 4
+    else:  # decode
+        out["weights"] = params_dev * (2 if cfg.fsdp else 1)
+        est = estimate_cell_memory(cfg, shape, mesh_shape)
+        out["cache_read"] = est["kv_or_state_cache"] * 2**30
+        out["activations"] = 20.0 * b_loc * D * 2 * L
+        out["logits"] = b_loc * (V // tp) * 4
+    out["total"] = sum(out.values())
+    return out
+
+
+def select_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                        mesh_shape: Optional[Dict[str, int]] = None,
+                        hbm_budget_gib: float = 14.0) -> int:
+    """Zero-autotuning microbatch selection — the paper's philosophy applied
+    one level up: choose the smallest gradient-accumulation factor whose
+    predicted per-device footprint fits the HBM budget.
+
+    Footprint(mb) = fixed (params + m/v + grads + f32 grad accumulator for
+    mb>1) + (stash + transients)/mb.  Deterministic, model-driven, O(#mb)."""
+    if shape.kind != "train":
+        return 1
+    est = estimate_cell_memory(cfg, shape, mesh_shape)
+    fixed = est["params"] + est["optimizer_m_v"] + est["gradients"]
+    act = est["remat_stash"] + est["transient_est"]
+    for mb in (1, 2, 4, 8, 16, 32):
+        if shape.global_batch % mb:
+            continue
+        accum = 0.0 if mb == 1 else 2 * est["params"]  # f32 accumulator
+        if fixed + accum + act / mb <= hbm_budget_gib:
+            return mb
+    return 32

@@ -1,0 +1,99 @@
+"""Batched serving driver: prefill + decode with a sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+        --smoke --batch 4 --prompt-len 32 --gen 32
+
+Requests are processed as a continuous batch: one prefill (returns the
+decode cache), then step-synchronous decode with temperature sampling.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.distributed import (batch_shardings, cache_shardings,
+                               param_shardings, replicated)
+from repro.launch.mesh import make_local_mesh
+from repro.nn.frontends import synth_frontend_inputs
+from repro.nn.model import Model
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    mesh = make_local_mesh(tp=args.tp)
+    max_len = args.prompt_len + args.gen
+
+    rng = jax.random.PRNGKey(args.seed)
+    p_sh = param_shardings(model, mesh)
+    params = jax.jit(model.init, out_shardings=p_sh)(rng)
+
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len),
+                                 0, cfg.vocab_size)
+    extras = synth_frontend_inputs(cfg, rng, args.batch, args.prompt_len)
+
+    # Prefill: logits for the last prompt position + the decode cache.
+    t0 = time.time()
+    logits, cache = jax.jit(model.prefill)(params, prompts, extras or None)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    # Pad / place the cache for max_len decoding.
+    full_cache = model.init_cache(args.batch, max_len)
+
+    def place(dst, src):
+        if dst.ndim >= 4 and dst.shape != src.shape:   # KV: (L,B,H,S,d)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=3)
+        return src.astype(dst.dtype)
+
+    cache = jax.tree_util.tree_map(place, full_cache, cache)
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    sample_rng = rng
+    tokens = jnp.argmax(logits, axis=-1)
+    out = [np.asarray(tokens)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, cache, tokens, pos)
+        sample_rng, sub = jax.random.split(sample_rng)
+        if args.temperature > 0:
+            tokens = jax.random.categorical(
+                sub, logits / args.temperature, axis=-1)
+        else:
+            tokens = jnp.argmax(logits, axis=-1)
+        out.append(np.asarray(tokens))
+    jax.block_until_ready(tokens)
+    t_decode = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill*1e3:.0f}ms; "
+          f"decoded {args.gen-1} steps at {toks_per_s:.1f} tok/s total")
+    print("sample generations (first 2 rows, first 16 tokens):")
+    for row in gen[:2]:
+        print("  ", row[:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

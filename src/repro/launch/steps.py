@@ -1,0 +1,84 @@
+"""Step functions shared by the trainer, the server and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.model import Model
+from repro.optim.adamw import AdamW, OptState
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    opt: OptState
+    step: jax.Array
+
+
+def make_train_step(model: Model, optimizer: AdamW, microbatches: int = 1
+                    ) -> Callable[[TrainState, Dict],
+                                  Tuple[TrainState, Dict]]:
+    """Build the jittable train step.
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    processed in N sequential micro-steps, dividing the remat layer-stash
+    footprint by N at the cost of an f32 gradient accumulator.  The count is
+    *selected analytically* from the memory model (launch.memory.
+    select_microbatches) — the tritonBLAS philosophy applied to memory."""
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches,
+                                    x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, micro):
+                loss_sum, g_sum = carry
+                l, g = jax.value_and_grad(model.loss)(state.params, micro)
+                g_sum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + l, g_sum), None
+
+            from repro.nn import scanning
+            (loss, gacc), _ = scanning.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / microbatches).astype(p.dtype),
+                gacc, state.params)
+        new_params, new_opt, om = optimizer.update(
+            grads, state.opt, state.params)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+    return train_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve_step(params: Dict, cache: Dict, tokens: jax.Array,
+                   pos: jax.Array) -> Tuple[jax.Array, Dict]:
+        return model.decode_step(params, cache, tokens, pos)
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        return model.prefill(params, tokens, extras or None)
+    return prefill_step
+
+
+def abstract_train_state(model: Model, optimizer: AdamW) -> TrainState:
+    p = model.abstract_params()
+    return TrainState(params=p, opt=optimizer.abstract_state(p),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))

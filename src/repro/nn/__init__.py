@@ -1,0 +1,5 @@
+"""Model substrate: configs, layers, families, facade."""
+from repro.nn.config import SHAPES, ModelConfig, ShapeSpec, shape_applicable
+from repro.nn.model import Model
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "shape_applicable", "Model"]

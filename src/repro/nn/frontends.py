@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+``[audio]`` (musicgen) and ``[vlm]`` (llava) cells exercise the transformer
+backbone; the EnCodec/vision towers are out of scope.  These helpers produce
+the precomputed frame/patch embeddings the backbone consumes — as
+ShapeDtypeStructs for the dry-run and as synthetic arrays for smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelConfig
+
+
+def frontend_input_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    if cfg.frontend == "audio":
+        return {"frame_embed": jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), jnp.bfloat16)}
+    if cfg.frontend == "vision":
+        p = min(cfg.frontend_tokens, seq)
+        return {"patch_embed": jax.ShapeDtypeStruct(
+            (batch, p, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+def synth_frontend_inputs(cfg: ModelConfig, rng: jax.Array, batch: int,
+                          seq: int) -> Dict:
+    specs = frontend_input_specs(cfg, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        rng, sub = jax.random.split(rng)
+        out[name] = (jax.random.normal(sub, s.shape, jnp.float32) * 0.02
+                     ).astype(s.dtype)
+    return out

@@ -1,0 +1,242 @@
+"""Building blocks + parameter-definition machinery.
+
+Params are plain nested dicts of arrays.  Every parameter is declared as a
+``ParamDef`` carrying its *logical axis names* — the t5x-style indirection the
+distributed layer uses to map params onto the mesh (DESIGN.md §7).  The same
+def tree yields:
+
+  * ``init_tree``      — materialized params (smoke tests, examples, training)
+  * ``abstract_tree``  — ShapeDtypeStructs (multi-pod dry-run, no allocation)
+  * ``axes_tree``      — logical axes (sharding rules)
+
+Dense contractions go through ``repro.kernels.ops.matmul`` — the tritonBLAS
+selector chooses the kernel tiling at trace time (zero autotuning).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.nn import attention as attn_lib
+from repro.nn.config import ModelConfig
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == ndim
+    init: str = "normal"              # normal | zeros | ones | ssm_a | ssm_dt
+    dtype: Any = jnp.bfloat16
+    scale: float = 0.02
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_def)
+
+
+def init_tree(rng: jax.Array, defs) -> Dict:
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def make(d: ParamDef, key):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "ssm_a":     # -exp(U[log 1, log 16]) init for A_log
+            u = jax.random.uniform(key, d.shape, jnp.float32)
+            return jnp.log(1.0 + u * 15.0).astype(d.dtype)
+        if d.init == "ssm_dt":    # dt bias in [1e-3, 1e-1] (softplus-inverse)
+            u = jax.random.uniform(key, d.shape, jnp.float32,
+                                   minval=-4.6, maxval=-2.3)
+            return u.astype(d.dtype)
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * d.scale).astype(d.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(d, k) for d, k in zip(leaves, rngs)])
+
+
+def abstract_tree(defs):
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def axes_tree(defs):
+    return tree_map_defs(lambda d: d.axes, defs)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers.
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def norm(x: jax.Array, p: Dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_defs(cfg: ModelConfig) -> Dict:
+    d = {"scale": ParamDef((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def dense(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """Selector-driven GEMM: x (..., K) @ w (K, N)."""
+    return kops.matmul(x, w, out_dtype=out_dtype or x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, d); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, None]                       # (1, 1, S, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, None]                          # (B, 1, S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA + RoPE + KV cache).
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "norm": norm_defs(cfg),
+        "wq": ParamDef((D, H * hd), ("embed", "heads")),
+        "wk": ParamDef((D, Hkv * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((D, Hkv * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((H * hd, D), ("heads", "embed")),
+    }
+
+
+def _repeat_kv_weight(w: jax.Array, hkv: int, hd: int, group: int
+                      ) -> jax.Array:
+    """(D, Hkv*hd) -> (D, H*hd) by repeating each kv head's columns.
+
+    Repeating the WEIGHT (tiny) instead of the activation kills the
+    per-layer K/V all-gather GSPMD inserts when Hkv < "model" axis size
+    (Megatron KV duplication; EXPERIMENTS.md §Perf)."""
+    D = w.shape[0]
+    return jnp.repeat(w.reshape(D, hkv, hd), group, axis=1) \
+        .reshape(D, hkv * group * hd)
+
+
+def attn_forward(
+    p: Dict,
+    x: jax.Array,                    # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,            # (S,)
+) -> jax.Array:
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = norm(x, p["norm"], cfg)
+    q = dense(h, p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    group = H // Hkv
+    if cfg.kv_repeat_weights and group > 1:
+        wk = _repeat_kv_weight(p["wk"], Hkv, hd, group)
+        wv = _repeat_kv_weight(p["wv"], Hkv, hd, group)
+        k = dense(h, wk).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        v = dense(h, wv).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    else:
+        k = dense(h, p["wk"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+        v = dense(h, p["wv"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kops.get_backend() == "pallas" and cfg.sliding_window == 0:
+        out = kops.flash_attention(q, k, v, causal=True)
+    else:
+        out = attn_lib.chunked_attention(
+            q, k, v, causal=True, sliding_window=cfg.sliding_window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return dense(out, p["wo"])
+
+
+def attn_decode(
+    p: Dict,
+    x: jax.Array,                    # (B, 1, D)
+    cache: Dict,                     # {"k": (B,Hkv,S,d), "v": ...}
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,                  # scalar int32 — index of this token
+) -> Tuple[jax.Array, Dict]:
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = norm(x, p["norm"], cfg)
+    q = dense(h, p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    k = dense(h, p["wk"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+    v = dense(h, p["wv"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
+    posv = jnp.reshape(pos, (1,))
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
+    out = attn_lib.decode_attention(
+        q, k_cache, v_cache, pos=pos, sliding_window=cfg.sliding_window,
+        gqa_packed=cfg.gqa_packed_decode)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return dense(out, p["wo"]), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLP.
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "norm": norm_defs(cfg),
+            "wg": ParamDef((D, F), ("embed", "mlp")),
+            "wu": ParamDef((D, F), ("embed", "mlp")),
+            "wd": ParamDef((F, D), ("mlp", "embed")),
+        }
+    return {
+        "norm": norm_defs(cfg),
+        "w1": ParamDef((D, F), ("embed", "mlp")),
+        "w2": ParamDef((F, D), ("mlp", "embed")),
+    }
+
+
+def mlp_forward(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = norm(x, p["norm"], cfg)
+    if cfg.activation == "swiglu":
+        g = dense(h, p["wg"])
+        u = dense(h, p["wu"])
+        return dense(jax.nn.silu(g) * u, p["wd"])
+    return dense(jax.nn.gelu(dense(h, p["w1"])), p["w2"])

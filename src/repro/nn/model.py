@@ -1,0 +1,83 @@
+"""Model facade: one object tying config, params, and the three entrypoints
+(train loss, prefill, decode) together — the public API used by the
+launcher, tests, benchmarks and examples."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import frontends, layers as L, transformer as T
+from repro.nn.config import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -------------------------------------------------------
+    def defs(self) -> Dict:
+        return T.model_defs(self.cfg)
+
+    def init(self, rng: jax.Array) -> Dict:
+        return L.init_tree(rng, self.defs())
+
+    def abstract_params(self) -> Dict:
+        return L.abstract_tree(self.defs())
+
+    def param_axes(self) -> Dict:
+        return L.axes_tree(self.defs())
+
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+    # -- entrypoints --------------------------------------------------------
+    def loss(self, params: Dict, batch: Dict) -> jax.Array:
+        return T.lm_loss(params, batch, self.cfg)
+
+    def forward(self, params: Dict, tokens: jax.Array,
+                extras: Optional[Dict] = None) -> jax.Array:
+        hidden, _ = T.forward_hidden(params, tokens, self.cfg, extras=extras)
+        return jnp.matmul(hidden, T.lm_head_weight(params, self.cfg),
+                          preferred_element_type=jnp.float32)
+
+    def prefill(self, params: Dict, tokens: jax.Array,
+                extras: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+        return T.prefill_forward(params, tokens, self.cfg, extras=extras)
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Dict]:
+        return T.decode_step(params, cache, tokens, pos, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return T.init_cache(self.cfg, batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        return T.init_cache_specs(self.cfg, batch, max_len)
+
+    # -- dry-run inputs -----------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        specs.update(frontends.frontend_input_specs(self.cfg, B, S))
+        return specs
+
+    def model_flops(self, shape: ShapeSpec) -> float:
+        """MODEL_FLOPS for the roofline: 6·N·D per trained token (fwd+bwd),
+        2·N·D per inference token; MoE counts active params only."""
+        n = self.cfg.active_param_count()
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            return 6.0 * n * tokens
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            return 2.0 * n * tokens
+        return 2.0 * n * shape.global_batch       # decode: one token/seq

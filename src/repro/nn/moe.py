@@ -1,0 +1,181 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch strategy (MaxText-style, memory-feasible at 128 experts): token
+copies are sorted by expert id, placed into a fixed-capacity (E, C, D) buffer
+by scatter-add, batched expert GEMMs run on the buffer, and results are
+gathered back with gate weighting.  Everything is O(T·k·D + E·C·(D+F)) — no
+(T, E, C) one-hot dispatch tensor.
+
+Expert GEMMs are exactly the grouped-GEMM case the paper calls out (its
+complexity argument §II-A covers "batched or grouped GEMM dimensions"): the
+analytical selector prices the (E·C, D, F) contraction shapes with zero
+autotuning.  Expert weights carry the "experts" logical axis so EP sharding
+is a rule-table entry (qwen3: 128 experts over the 16-way "model" axis;
+mixtral: 8 experts keep d_ff tensor-parallel instead — 8 does not divide 16).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import ParamDef, norm, norm_defs
+
+
+def moe_defs(cfg: ModelConfig) -> Dict:
+    """Expert weights use dedicated logical axes: the contraction dim D is
+    NEVER data-sharded (FSDP'ing it makes every expert einsum a partial
+    sum -> f32 (E,C,F) all-reduces over "data", measured at TB/step scale
+    on mixtral — EXPERIMENTS.md §Perf iteration 9); the FSDP shard lives on
+    the expert-F dim instead (("model","data") when both divide)."""
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    return {
+        "norm": norm_defs(cfg),
+        "router": ParamDef((D, E), ("embed_novar", "experts_in")),
+        "wg": ParamDef((E, D, F), ("experts", "expert_embed", "expert_mlp")),
+        "wu": ParamDef((E, D, F), ("experts", "expert_embed", "expert_mlp")),
+        "wd": ParamDef((E, F, D), ("experts", "expert_mlp", "expert_embed")),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)     # round up to 8 for TPU-friendly shapes
+
+
+def moe_forward(p: Dict, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Tokens over capacity are dropped
+    (standard Switch/GShard semantics; capacity_factor controls the rate).
+
+    ``cfg.moe_local_dispatch`` (needs an installed mesh): tokens are
+    regrouped per data shard and sorted/packed *within* their shard, so the
+    scatter into the (E, C, D) dispatch buffer never crosses devices — the
+    buffer carries a leading data-sharded group dim and GSPMD emits the
+    canonical (B,S,D)-scale combine collective instead of all-reducing the
+    full multi-GB dispatch buffer across "data" (EXPERIMENTS.md §Perf,
+    mixtral iteration)."""
+    from repro import meshctx
+    mesh = meshctx.get_mesh()
+    if cfg.moe_local_dispatch and mesh is not None:
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= mesh.shape.get(a, 1)
+        if (x.shape[0] * x.shape[1]) % dp == 0 and dp > 1:
+            return _moe_forward_grouped(p, x, cfg, dp)
+    return _moe_forward_flat(p, x, cfg)
+
+
+def _moe_forward_grouped(p: Dict, x: jax.Array, cfg: ModelConfig, dp: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    from repro import meshctx
+    B, S, D = x.shape
+    h = norm(x, p["norm"], cfg)
+    flat = h.reshape(B * S, D)
+    g = flat.reshape(dp, (B * S) // dp, D)
+    g = meshctx.constrain(g, ("pod", "data"), None, None)
+    y, aux = jax.vmap(lambda t: _dispatch_compute(p, t, cfg))(g)
+    aux = jnp.mean(aux)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    return y, aux
+
+
+def _moe_forward_flat(p: Dict, x: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    h = norm(x, p["norm"], cfg)
+    y, aux = _dispatch_compute(p, h.reshape(B * S, D), cfg)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def _dispatch_compute(p: Dict, flat: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based capacity dispatch + expert GEMMs for (T, D) tokens."""
+    T, D = flat.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, T)
+
+    logits = (flat.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))              # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_ids = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch Transformer eq. 4).
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_ids, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ------------------------------------------
+    eids = gate_ids.reshape(T * K)                             # (TK,)
+    tids = jnp.repeat(jnp.arange(T), K)                        # token of copy
+    gvals = gate_vals.reshape(T * K)
+    order = jnp.argsort(eids)                                  # stable
+    eids_s, tids_s, gvals_s = eids[order], tids[order], gvals[order]
+    # position of each copy within its expert's run
+    starts = jnp.searchsorted(eids_s, jnp.arange(E))           # (E,)
+    pos_in_e = jnp.arange(T * K) - starts[eids_s]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, eids_s * C + pos_in_e, E * C)       # overflow slot
+
+    buf = jnp.zeros((E * C + 1, D), flat.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], flat[tids_s], 0))
+    xe = buf[:-1].reshape(E, C, D)
+
+    # ---- expert GEMMs (grouped; "experts" axis shardable) -------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+
+    # ---- combine -------------------------------------------------------
+    y_copies = ye.reshape(E * C, D)
+    safe_slot = jnp.where(keep, slot, 0)
+    gathered = y_copies[safe_slot] * jnp.where(
+        keep, gvals_s, 0.0)[:, None].astype(y_copies.dtype)
+    y = jnp.zeros((T, D), flat.dtype).at[tids_s].add(
+        gathered.astype(flat.dtype))
+    return y, aux
+
+
+def moe_decode(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Decode-step MoE (B tokens, B small).
+
+    Baseline: gather the K selected experts' weights per token (B·K·D·F
+    reads — and, with experts sharded over "model", a multi-GB weight
+    all-gather per layer per step).
+
+    ``cfg.moe_dense_decode``: compute EVERY expert on every token instead —
+    experts never move (each chip runs its local E/16 experts on the tiny
+    (B, D) batch), gates mask the sum, one (B, D) all-reduce combines.
+    ~E/K× more MoE flops but decode flops are negligible; kills the
+    dominant collective term (EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape      # S == 1
+    E, K = cfg.num_experts, cfg.experts_per_token
+    h = norm(x, p["norm"], cfg).reshape(B, D)
+    logits = h.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gate_vals, gate_ids = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    if cfg.moe_dense_decode:
+        gates = jnp.einsum("bke,bk->be",
+                           jax.nn.one_hot(gate_ids, E, dtype=jnp.float32),
+                           gate_vals)                       # (B, E) dense
+        g = jnp.einsum("bd,edf->ebf", h, p["wg"])           # E stays put
+        u = jnp.einsum("bd,edf->ebf", h, p["wu"])
+        ye = jnp.einsum("ebf,efd->ebd", jax.nn.silu(g) * u, p["wd"])
+        y = jnp.einsum("ebd,be->bd", ye, gates.astype(ye.dtype))
+        return y.reshape(B, 1, D).astype(x.dtype)
+
+    wg = p["wg"][gate_ids]         # (B, K, D, F) gather
+    wu = p["wu"][gate_ids]
+    wd = p["wd"][gate_ids]
+    g = jnp.einsum("bd,bkdf->bkf", h, wg)
+    u = jnp.einsum("bd,bkdf->bkf", h, wu)
+    y = jnp.einsum("bkf,bkfd->bkd", jax.nn.silu(g) * u, wd)
+    y = jnp.einsum("bkd,bk->bd", y, gate_vals.astype(y.dtype))
+    return y.reshape(B, 1, D).astype(x.dtype)

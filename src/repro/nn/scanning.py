@@ -1,0 +1,29 @@
+"""Scan wrapper with a global unroll switch.
+
+XLA's cost_analysis counts a ``while`` body ONCE regardless of trip count,
+so scanned-over-layers modules under-report FLOPs/bytes.  The dry-run's
+cost probes flip ``set_unroll(True)`` to fully unroll every scan in reduced
+(L, S) variants, making cost_analysis exact; production/training keeps
+scans rolled (compile time, remat)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def get_unroll() -> bool:
+    return _UNROLL
+
+
+def scan(body: Callable, init: Any, xs: Any = None,
+         length: Optional[int] = None):
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _UNROLL else 1)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamW, OptState, global_norm
+from repro.optim.compression import (
+    compress_with_feedback,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = ["AdamW", "OptState", "global_norm", "compress_with_feedback",
+           "compressed_psum", "dequantize_int8", "quantize_int8",
+           "constant", "warmup_cosine"]

@@ -1,0 +1,82 @@
+"""AdamW with global-norm clipping — functional, pytree-native.
+
+Moments are kept in f32 regardless of param dtype (bf16 params + f32 state is
+the deployment configuration the dry-run memory analysis accounts)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    m: Dict
+    v: Dict
+    count: jax.Array
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Schedule] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Dict) -> OptState:
+        zeros = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return OptState(m=zeros(params), v=zeros(params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def abstract_state(self, abstract_params: Dict) -> OptState:
+        f32 = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), t)
+        return OptState(m=f32(abstract_params), v=f32(abstract_params),
+                        count=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def update(self, grads: Dict, state: OptState, params: Dict
+               ) -> Tuple[Dict, OptState, Dict]:
+        """Returns (new_params, new_state, metrics)."""
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm > 0:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+        else:
+            scale = jnp.ones_like(gnorm)
+        lr = self.lr(count) if callable(self.lr) else jnp.float32(self.lr)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m2 / b1c
+            vh = v2 / b2c
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, OptState(m=new_m, v=new_v, count=count), metrics
+
+
+def global_norm(tree: Dict) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,50 @@
+"""Gradient compression for the data-parallel axes (distributed-optimization
+trick): int8 quantization with error feedback.
+
+The bandwidth-honest collective shape: ``all_gather`` of int8 shards + local
+dequant-reduce moves 1/4 the bytes of an f32 all-reduce (and 1/2 of bf16).
+Error feedback keeps the quantization bias out of the trajectory (Seide et
+al.; Karimireddy et al. 2019).  Used inside shard_map over the DP axes —
+see distributed.collectives.compressed_psum and launch.train (--compress-dp).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q, scale, new_err): err accumulates what int8 dropped."""
+    y = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(y)
+    new_err = y - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce g over ``axis_name`` moving int8 on the wire.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.  Returns
+    (mean_g_f32, new_err)."""
+    q, scale, new_err = compress_with_feedback(g, err)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    n = qs.shape[0]
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+    return total / n, new_err

@@ -1,0 +1,12 @@
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    PreemptionGuard,
+    StragglerMonitor,
+    elastic_reshard,
+    is_transient,
+    retry,
+)
+from repro.runtime.metrics import MetricLogger
+
+__all__ = ["Heartbeat", "PreemptionGuard", "StragglerMonitor",
+           "elastic_reshard", "is_transient", "retry", "MetricLogger"]

@@ -1,0 +1,130 @@
+"""Fault-tolerance machinery for thousand-node runs.
+
+* ``StragglerMonitor`` — rolling z-score over step times; flags slow steps
+  (ICI neighbor stalls, host paging) so the launcher can alert/evict.
+* ``retry`` — bounded exponential backoff around a step function; transient
+  runtime errors (preempted device, DMA timeout) retry, deterministic
+  errors re-raise immediately.
+* ``PreemptionGuard`` — SIGTERM/SIGINT hook that flips a flag the train
+  loop polls to checkpoint-and-exit cleanly inside the grace period.
+* ``Heartbeat`` — liveness file another process/agent can watch.
+* ``elastic_reshard`` — move a state pytree onto a *new* mesh (device count
+  changed after failures) given new shardings; with checkpoints this gives
+  restart-elastic scaling.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, List, Optional, Tuple
+
+import jax
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, z_threshold: float = 4.0,
+                 min_steps: int = 10):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.z = z_threshold
+        self.min_steps = min_steps
+        self.flagged: List[Tuple[int, float, float]] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> Optional[str]:
+        self._step += 1
+        msg = None
+        if len(self.times) >= self.min_steps:
+            mean = sum(self.times) / len(self.times)
+            var = sum((t - mean) ** 2 for t in self.times) / len(self.times)
+            std = max(var ** 0.5, 1e-9)
+            z = (seconds - mean) / std
+            if z > self.z and seconds > 1.5 * mean:
+                self.flagged.append((self._step, seconds, z))
+                msg = (f"straggler: step {self._step} took {seconds:.3f}s "
+                       f"(z={z:.1f}, mean={mean:.3f}s)")
+        self.times.append(seconds)
+        return msg
+
+
+_TRANSIENT_MARKERS = (
+    "RESOURCE_EXHAUSTED", "UNAVAILABLE", "DEADLINE_EXCEEDED", "ABORTED",
+    "preempted", "Socket closed", "transient",
+)
+
+
+def is_transient(err: Exception) -> bool:
+    s = repr(err)
+    return any(m in s for m in _TRANSIENT_MARKERS)
+
+
+def retry(fn: Callable, *args, retries: int = 3, base_delay: float = 0.5,
+          on_retry: Optional[Callable[[int, Exception], None]] = None,
+          **kwargs):
+    """Run fn with bounded exponential backoff on *transient* errors."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except Exception as e:                      # noqa: BLE001
+            if attempt >= retries or not is_transient(e):
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(base_delay * (2 ** attempt))
+            attempt += 1
+
+
+class PreemptionGuard:
+    """Installs SIGTERM/SIGINT handlers; loop polls .should_stop."""
+
+    def __init__(self, install: bool = True):
+        self._stop = threading.Event()
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass                             # non-main thread
+
+    def _handler(self, signum, frame):
+        self._stop.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def request_stop(self):
+        self._stop.set()
+
+
+class Heartbeat:
+    """Writes a monotonically-increasing liveness timestamp to a file."""
+
+    def __init__(self, path: str, interval: float = 10.0):
+        self.path = path
+        self.interval = interval
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            try:
+                with open(self.path, "w") as f:
+                    f.write(f"{time.time():.3f}\n")
+            except OSError:
+                pass
+
+    def close(self):
+        self._stop.set()
+
+
+def elastic_reshard(tree: Any, new_shardings: Any) -> Any:
+    """Re-place a state pytree onto new shardings (mesh may differ)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings)

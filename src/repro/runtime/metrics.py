@@ -1,0 +1,39 @@
+"""Step metrics: rolling stats + JSONL logging."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Any, Dict, Optional
+
+
+class MetricLogger:
+    def __init__(self, path: Optional[str] = None, window: int = 20):
+        self.path = path
+        self.window = deque(maxlen=window)
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a")
+        else:
+            self._f = None
+
+    def log(self, step: int, **metrics: Any) -> Dict:
+        rec = {"step": step, "time": time.time()}
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = str(v)
+        if "step_time" in rec:
+            self.window.append(rec["step_time"])
+            rec["steps_per_s"] = (len(self.window)
+                                  / max(sum(self.window), 1e-9))
+        if self._f:
+            self._f.write(json.dumps(rec) + "\n")
+            self._f.flush()
+        return rec
+
+    def close(self):
+        if self._f:
+            self._f.close()

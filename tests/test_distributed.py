@@ -1,0 +1,24 @@
+"""Distribution-layer tests, run in a subprocess with 8 fake CPU devices
+(XLA device count locks at first jax init, so the main pytest process
+must stay at 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_distributed_suite_on_8_fake_devices():
+    worker = os.path.join(os.path.dirname(__file__), "distributed_worker.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)   # the worker sets its own
+    proc = subprocess.run(
+        [sys.executable, worker], env=env, capture_output=True, text=True,
+        timeout=560)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for marker in ("spec_divisibility_drop", "tp_matmul", "compressed_psum",
+                   "elastic_restore", "sharded_train_step"):
+        assert f"CHECK_OK {marker}" in out, out[-4000:]
+    assert "ALL_DISTRIBUTED_OK" in out

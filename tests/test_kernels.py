@@ -1,0 +1,178 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TileConfig
+from repro.kernels import flash_attention, matmul, select_attention_blocks
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _mm_case(M, N, K, dt, **kw):
+    a = jnp.asarray(RNG.standard_normal((M, K)), dtype=dt)
+    b = jnp.asarray(RNG.standard_normal((K, N)), dtype=dt)
+    want = np.asarray(ref.matmul_ref(a, b, out_dtype=jnp.float32))
+    got = np.asarray(matmul(a, b, out_dtype=jnp.float32,
+                            backend="pallas_interpret", **kw))
+    rtol = 1e-5 if dt == jnp.float32 else 3e-2
+    atol = (1e-4 if dt == jnp.float32 else 0.3) * np.sqrt(K)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (128, 128, 128),       # single block
+    (256, 512, 384),       # multi-block, ragged K
+    (100, 300, 77),        # fully unaligned (padding path)
+    (512, 256, 1024),      # k-major
+    (1, 128, 128),         # degenerate M
+    (640, 256, 256),       # non-pow2 M
+])
+def test_matmul_vs_ref(shape, dt):
+    _mm_case(*shape, dt)
+
+
+def test_matmul_selected_config_paths():
+    """The analytically selected config must be numerically equivalent."""
+    for (M, N, K) in [(384, 640, 512), (2048, 256, 128), (64, 2048, 2048)]:
+        _mm_case(M, N, K, jnp.bfloat16)
+
+
+def test_matmul_split_k():
+    _mm_case(64, 128, 2048, jnp.bfloat16,
+             config=TileConfig(bm=64, bn=128, bk=256, split_k=4))
+
+
+def test_matmul_grouped_order():
+    _mm_case(512, 256, 256, jnp.bfloat16,
+             config=TileConfig(bm=128, bn=128, bk=256, group_m=4))
+
+
+def test_matmul_batched_leading_dims():
+    a = jnp.asarray(RNG.standard_normal((2, 3, 64, 128)), dtype=jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((128, 96)), dtype=jnp.float32)
+    got = np.asarray(matmul(a, b, out_dtype=jnp.float32,
+                            backend="pallas_interpret"))
+    want = np.asarray(ref.matmul_ref(a.reshape(-1, 128), b)
+                      ).reshape(2, 3, 64, 96)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    M=st.integers(1, 4).map(lambda k: k * 64 + 32),
+    N=st.integers(1, 3).map(lambda k: k * 128),
+    K=st.integers(1, 3).map(lambda k: k * 128 - 5),
+)
+def test_matmul_property_random_shapes(M, N, K):
+    _mm_case(M, N, K, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("cfg", [
+    (1, 2, 2, 128, 128, 64),     # MHA
+    (2, 4, 2, 256, 256, 64),     # GQA 2:1
+    (1, 8, 2, 100, 300, 128),    # ragged seq (padding/mask path)
+    (1, 2, 1, 384, 384, 128),    # GQA 2:1 deep
+])
+def test_flash_attention_vs_ref(cfg, causal):
+    B, H, Hkv, Sq, Skv, d = cfg
+    q = jnp.asarray(RNG.standard_normal((B, H, Sq, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, Skv, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, Skv, d)), dtype=jnp.float32)
+    want = np.asarray(ref.attention_ref(q, k, v, causal=causal))
+    got = np.asarray(flash_attention(q, k, v, causal=causal,
+                                     backend="pallas_interpret",
+                                     blocks=(128, 128)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-5)
+
+
+def test_flash_attention_selected_blocks():
+    bq, bkv = select_attention_blocks(4096, 4096, 128)
+    assert bq >= 128 and bkv >= 128
+    # selected blocks stay inside the VMEM budget by construction;
+    # check determinism
+    assert (bq, bkv) == select_attention_blocks(4096, 4096, 128)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((1, 4, 256, 64)), dtype=jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), dtype=jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 256, 64)), dtype=jnp.bfloat16)
+    want = np.asarray(ref.attention_ref(q, k, v, causal=True)
+                      ).astype(np.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=True,
+                                     backend="pallas_interpret",
+                                     blocks=(128, 128))).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# jax-native chunked attention (the GSPMD/dry-run path) vs the same oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_vs_ref(causal, window):
+    from repro.nn.attention import chunked_attention
+    if window and not causal:
+        pytest.skip("sliding window implies causal")
+    B, H, Hkv, S, d = 2, 4, 2, 200, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, S, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    got = np.asarray(chunked_attention(q, k, v, causal=causal,
+                                       sliding_window=window,
+                                       chunk_q=64, chunk_k=64))
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    kf = jnp.repeat(kf, 2, axis=1)
+    vf = jnp.repeat(vf, 2, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * (d ** -0.5)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = jnp.tril(mask)
+    if window:
+        iq, ik = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+        mask = mask & (iq - ik < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    want = np.asarray(jnp.einsum("bhqk,bhkd->bhqd",
+                                 jax.nn.softmax(s, axis=-1), vf))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_gqa_packed_equivalence():
+    """Packed grouped-query decode (no KV repeat — §Perf) must equal the
+    repeat formulation bit-for-bit up to float tolerance."""
+    from repro.nn.attention import decode_attention
+    B, H, Hkv, S, d = 2, 6, 2, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, 1, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    a = np.asarray(decode_attention(q, k, v, pos=jnp.int32(S - 1)))
+    b = np.asarray(decode_attention(q, k, v, pos=jnp.int32(S - 1),
+                                    gqa_packed=True))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_matches_prefix():
+    from repro.nn.attention import chunked_attention, decode_attention
+    B, H, Hkv, S, d = 1, 4, 2, 64, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, S, d)), dtype=jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, d)), dtype=jnp.float32)
+    full = np.asarray(chunked_attention(q, k, v, causal=True,
+                                        chunk_q=32, chunk_k=32))
+    # decode for the last position must match the full causal row
+    out = np.asarray(decode_attention(q[:, :, -1:, :], k, v,
+                                      pos=jnp.int32(S - 1)))
+    np.testing.assert_allclose(out[:, :, 0], full[:, :, -1],
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,156 @@
+"""Core analytical model + selector: unit and property tests (paper Alg 3-9)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TPU_V4,
+    TPU_V5E,
+    TPU_V5P,
+    GemmProblem,
+    TileConfig,
+    candidate_tiles,
+    chip_waves,
+    clear_selection_cache,
+    gemm_latency,
+    grid_shape,
+    hbm_traffic,
+    rank_candidates,
+    reuse_fraction,
+    select_gemm_config,
+    selection_cache_size,
+    simulate_gemm,
+    vmem_working_set,
+)
+from repro.core.latency import score_candidate
+
+DIMS = st.integers(min_value=1, max_value=8192)
+DIMS128 = st.integers(min_value=1, max_value=64).map(lambda k: k * 128)
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_candidates_respect_vmem_and_alignment(M, N, K):
+    p = GemmProblem(M=M, N=N, K=K)
+    cands = candidate_tiles(p, TPU_V5E)
+    assert cands, (M, N, K)
+    budget = TPU_V5E.vmem_budget()
+    sub = TPU_V5E.sublane(p.in_dtype)
+    for t in cands:
+        assert vmem_working_set(t, p.in_dtype, TPU_V5E) <= budget
+        assert t.bm % sub == 0
+        assert t.bn % TPU_V5E.lane_width == 0
+        assert t.bk % TPU_V5E.lane_width == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_latency_model_properties(M, N, K):
+    p = GemmProblem(M=M, N=N, K=K)
+    for t in candidate_tiles(p, TPU_V5E)[:20]:
+        b = gemm_latency(p, t, TPU_V5E)
+        assert b.total > 0
+        assert b.bottleneck in ("mxu_compute", "vmem_bandwidth",
+                                "hbm_bandwidth", "dma_issue",
+                                "pipeline_fill")
+        # paper Alg. 5: hit rate bounded
+        assert 0.0 <= reuse_fraction(p, t) <= 1.0
+        # traffic at least compulsory
+        assert hbm_traffic(p, t) >= p.min_bytes * 0.999
+        # fast scoring path identical to the full model
+        assert math.isclose(score_candidate(p, t, TPU_V5E), b.total,
+                            rel_tol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(M=DIMS128, N=DIMS128, K=DIMS128)
+def test_selection_deterministic_and_cached(M, N, K):
+    clear_selection_cache()
+    s1 = select_gemm_config(M, N, K)
+    n = selection_cache_size()
+    s2 = select_gemm_config(M, N, K)
+    assert selection_cache_size() == n
+    assert s1.config == s2.config
+    assert s1.predicted.total == s2.predicted.total
+
+
+def test_latency_monotonic_in_k():
+    """Same tile, growing K -> latency must not decrease (more grid steps)."""
+    t = TileConfig(bm=256, bn=256, bk=256)
+    prev = 0.0
+    for K in (256, 512, 1024, 2048, 4096):
+        cur = gemm_latency(GemmProblem(M=1024, N=1024, K=K), t, TPU_V5E).total
+        assert cur > prev
+        prev = cur
+
+
+def test_large_square_gemm_is_compute_bound():
+    s = select_gemm_config(8192, 8192, 8192)
+    assert s.predicted.bottleneck == "mxu_compute"
+    # near-peak predicted throughput
+    assert s.predicted_tflops > 150
+
+
+def test_memory_bound_gemm_identified():
+    # skinny: M=8 -> heavy padding, HBM-dominated
+    s = select_gemm_config(8, 8192, 8192)
+    assert s.predicted.bottleneck in ("hbm_bandwidth", "dma_issue")
+
+
+def test_chip_waves_matches_paper_alg4():
+    p = GemmProblem(M=4096, N=4096, K=128)
+    t = TileConfig(bm=256, bn=256, bk=128)
+    active, waves = chip_waves(p, t, 256)
+    assert waves == 1 and active == 256          # exactly one full wave
+    active, waves = chip_waves(p, t, 100)
+    assert waves == 3 and active == 56           # 256 tiles over 100 chips
+
+
+def test_grid_shape_split_k():
+    p = GemmProblem(M=256, N=256, K=4096)
+    t = TileConfig(bm=256, bn=256, bk=256, split_k=4)
+    Tm, Tn, Tk = grid_shape(p, t)
+    assert (Tm, Tn, Tk) == (1, 1, 16)
+
+
+@pytest.mark.parametrize("hw", [TPU_V5E, TPU_V5P, TPU_V4])
+def test_architecture_portability(hw):
+    """Paper Fig. 5: the same model retargets by swapping constants only."""
+    s = select_gemm_config(4096, 4096, 4096, hw=hw)
+    assert s.hardware == hw.name
+    assert s.predicted.total > 0
+    # faster chips must predict faster GEMMs for the compute-bound case
+    if hw is not TPU_V5E:
+        base = select_gemm_config(4096, 4096, 4096, hw=TPU_V5E)
+        assert s.predicted.total < base.predicted.total
+
+
+def test_selection_efficiency_vs_simulator_spot():
+    """Fig. 3 in miniature: selector reaches >=85% of the simulator's
+    exhaustive argmin on a few representative shapes."""
+    shapes = [(4096, 4096, 4096), (256, 256, 8192), (2048, 512, 1024),
+              (128, 4096, 512), (1024, 1024, 256)]
+    effs = []
+    for (M, N, K) in shapes:
+        p = GemmProblem(M=M, N=N, K=K)
+        cands = candidate_tiles(p, TPU_V5E)
+        best_t, best_r = None, None
+        for t in cands:
+            r = simulate_gemm(p, t, TPU_V5E)
+            if best_r is None or r.time < best_r.time:
+                best_t, best_r = t, r
+        sel = select_gemm_config(M, N, K)
+        eff = best_r.time / simulate_gemm(p, sel.config, TPU_V5E).time
+        effs.append(eff)
+    assert sum(effs) / len(effs) >= 0.85, effs
+
+
+def test_simulator_conservation():
+    """Simulator moves at least the compulsory bytes and its MXU busy time
+    matches padded flops / peak."""
+    p = GemmProblem(M=1000, N=1000, K=1000)
+    t = TileConfig(bm=128, bn=128, bk=128)
+    r = simulate_gemm(p, t, TPU_V5E)
+    assert r.hbm_bytes >= p.min_bytes
+    assert r.time >= r.mxu_busy > 0
