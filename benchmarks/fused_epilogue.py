@@ -1,0 +1,86 @@
+"""Fused vs unfused epilogue: HBM bytes and modeled latency per layer shape.
+
+For each dense-layer GEMM family in ``src/repro/configs`` the seed executed
+the epilogue (bias / activation / gate-multiply / residual) as separate XLA
+elementwise ops — one full-output HBM round trip each.  The fused kernel
+runs the same work inside the accumulator flush, paying only the compulsory
+operand reads.  This bench prices both formulations with the roofline
+accounting (``hbm_traffic`` + ``epilogue_unfused_extra_bytes``) and the
+closed-form latency model, per representative (M, N, K, epilogue) cell.
+
+    PYTHONPATH=src python -m benchmarks.fused_epilogue
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+from benchmarks.common import write_csv
+from repro.core import (Epilogue, GemmProblem, epilogue_unfused_extra_bytes,
+                        gemm_latency, get_hardware, hbm_traffic,
+                        select_gemm_config)
+
+# (name, M, N, K, epilogue) — M = tokens per step (B*S), weights from
+# llama3-8B-ish / phi4 / mixtral expert shapes; the epilogue mirrors what
+# nn/layers.py & nn/moe.py now fuse.
+CASES = [
+    ("mlp_up_gelu",      8192,  14336, 4096, Epilogue(activation="gelu")),
+    ("mlp_gate_swiglu",  8192,  14336, 4096,
+     Epilogue(activation="swiglu_gate")),
+    ("mlp_down_residual", 8192, 4096, 14336, Epilogue(residual=True)),
+    ("attn_wo_residual", 8192,  4096,  4096, Epilogue(residual=True)),
+    ("expert_gate",      2048,  2816,  4096,
+     Epilogue(activation="swiglu_gate")),
+    ("bias_gelu_skinny",   64,  4096,  4096,
+     Epilogue(bias=True, activation="gelu")),
+]
+
+
+def run(hw_name: str = "tpu_v5e", in_dtype: str = "bfloat16",
+        out_dtype: str = "bfloat16", verbose: bool = True) -> List:
+    hw = get_hardware(hw_name)
+    rows: List = []
+    for (name, M, N, K, ep) in CASES:
+        fused_p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
+                              out_dtype=out_dtype, epilogue=ep)
+        plain_p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
+                              out_dtype=out_dtype)
+        sel = select_gemm_config(M, N, K, in_dtype=in_dtype,
+                                 out_dtype=out_dtype, epilogue=ep, hw=hw)
+        t = sel.config
+        fused_bytes = hbm_traffic(fused_p, t)
+        fused_lat = gemm_latency(fused_p, t, hw).total
+        # Unfused: plain GEMM traffic + one full-output round trip per
+        # post-op (+ operand reads) + per-op dispatch overhead.
+        extra = epilogue_unfused_extra_bytes(fused_p)
+        unfused_bytes = hbm_traffic(plain_p, t) + extra
+        unfused_lat = (gemm_latency(plain_p, t, hw).total
+                       + extra / hw.hbm_bandwidth
+                       + ep.n_ops * hw.kernel_launch)
+        byte_save = 1.0 - fused_bytes / unfused_bytes
+        lat_save = 1.0 - fused_lat / unfused_lat
+        rows.append([name, M, N, K, str(ep), str(t),
+                     fused_bytes, unfused_bytes, 100 * byte_save,
+                     fused_lat * 1e6, unfused_lat * 1e6, 100 * lat_save])
+        if verbose:
+            print(f"[fused_epilogue] {name:18s} {M}x{N}x{K} ep={ep}: "
+                  f"bytes {unfused_bytes/1e6:8.1f}MB -> "
+                  f"{fused_bytes/1e6:8.1f}MB (-{100*byte_save:.1f}%)  "
+                  f"latency {unfused_lat*1e6:8.1f}us -> "
+                  f"{fused_lat*1e6:8.1f}us (-{100*lat_save:.1f}%)")
+    write_csv("fused_epilogue.csv",
+              ["name", "M", "N", "K", "epilogue", "config",
+               "fused_bytes", "unfused_bytes", "byte_savings_pct",
+               "fused_us", "unfused_us", "latency_savings_pct"], rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default="tpu_v5e")
+    args = ap.parse_args()
+    run(hw_name=args.hw)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ def main() -> None:
                     help="paper-scale sweep sizes (slow on 1 CPU core)")
     args = ap.parse_args()
 
-    from benchmarks import (llama3_shapes, peak_vs_intensity,
+    from benchmarks import (fused_epilogue, llama3_shapes, peak_vs_intensity,
                             roofline_table, selection_efficiency,
                             selection_overhead)
     from repro.core import clear_selection_cache, select_gemm_config
@@ -49,6 +49,21 @@ def main() -> None:
     auto = tab[1][4]     # 512^3 autotune seconds
     print(f"tableII_selection_overhead,{cold:.1f},"
           f"autotune_512^3={auto:.1f}s_vs_select_{tab[1][2]:.0f}us")
+
+    # Vectorized cold-path scoring vs the seed's Python loop.
+    speedups = [row[7] for row in tab]
+    print(f"selector_scoring_speedup,{tab[2][6]:.1f},"
+          f"min={min(speedups):.1f}x_max={max(speedups):.1f}x")
+
+    # §Fused epilogue — fused vs unfused bytes/latency (roofline accounting).
+    t0 = time.perf_counter()
+    fe = fused_epilogue.run(verbose=False)
+    dt = (time.perf_counter() - t0) / max(len(fe), 1) * 1e6
+    byte_save = sum(r[8] for r in fe) / len(fe)
+    lat_save = sum(r[11] for r in fe) / len(fe)
+    print(f"fused_epilogue,{dt:.1f},"
+          f"mean_byte_savings={byte_save:.1f}%_"
+          f"mean_latency_savings={lat_save:.1f}%")
 
     # Fig. 4 — percent of peak vs arithmetic intensity.
     t0 = time.perf_counter()

@@ -10,15 +10,21 @@ from repro.core.hardware import (
     get_hardware,
 )
 from repro.core.latency import (
+    EPILOGUE_NONE,
+    Epilogue,
     GemmProblem,
     LatencyBreakdown,
     TileConfig,
     chip_waves,
+    epilogue_unfused_extra_bytes,
     gemm_latency,
     grid_shape,
     hbm_traffic,
     reuse_fraction,
     revisit_fractions,
+    score_candidate,
+    score_candidate_arrays,
+    score_candidates,
     vmem_working_set,
 )
 from repro.core.roofline import (
@@ -29,6 +35,8 @@ from repro.core.roofline import (
 )
 from repro.core.selector import (
     Selection,
+    argmin_candidate,
+    candidate_arrays,
     candidate_tiles,
     clear_selection_cache,
     rank_candidates,
@@ -40,12 +48,15 @@ from repro.core.simulator import SimResult, exhaustive_best, simulate_gemm
 __all__ = [
     "DTYPE_BYTES", "PRESETS", "TPU_V4", "TPU_V5E", "TPU_V5P",
     "HardwareSpec", "calibrate", "get_hardware",
-    "GemmProblem", "LatencyBreakdown", "TileConfig", "chip_waves",
+    "EPILOGUE_NONE", "Epilogue", "GemmProblem", "LatencyBreakdown",
+    "TileConfig", "chip_waves", "epilogue_unfused_extra_bytes",
     "gemm_latency", "grid_shape", "hbm_traffic", "reuse_fraction",
-    "revisit_fractions", "vmem_working_set",
+    "revisit_fractions", "score_candidate", "score_candidate_arrays",
+    "score_candidates", "vmem_working_set",
     "RooflineReport", "cost_analysis_terms", "parse_collective_bytes",
     "roofline",
-    "Selection", "candidate_tiles", "clear_selection_cache",
-    "rank_candidates", "select_gemm_config", "selection_cache_size",
+    "Selection", "argmin_candidate", "candidate_arrays", "candidate_tiles",
+    "clear_selection_cache", "rank_candidates", "select_gemm_config",
+    "selection_cache_size",
     "SimResult", "exhaustive_best", "simulate_gemm",
 ]

@@ -30,7 +30,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.hardware import DTYPE_BYTES, HardwareSpec
 
@@ -43,9 +45,67 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+_ACTIVATIONS = (None, "gelu", "silu", "swiglu_gate")
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """Post-GEMM work executed inside the kernel's accumulator flush.
+
+    Flush-order semantics (all in the f32 accumulator, DESIGN.md §3):
+
+        y = acc
+        y = y + bias                       (bias:       (N,) operand)
+        y = act(y)                         (gelu | silu)
+        y = silu(y) * gate                 (swiglu_gate: (M, N) operand)
+        y = y + residual                   (residual:   (M, N) operand)
+        out = cast(y, out_dtype)
+
+    Fusing these removes one full-output HBM round trip per post-op that XLA
+    would otherwise run as a separate elementwise kernel — the cost model
+    prices exactly that delta (``epilogue_unfused_extra_bytes``).
+    """
+
+    bias: bool = False
+    activation: Optional[str] = None     # None | gelu | silu | swiglu_gate
+    residual: bool = False
+
+    def __post_init__(self):
+        if self.activation not in _ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation {self.activation!r}; "
+                f"choose from {_ACTIVATIONS}")
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.activation or self.residual)
+
+    @property
+    def n_mn_operands(self) -> int:
+        """Extra full (M, N) operands the flush must read (gate, residual)."""
+        return int(self.activation == "swiglu_gate") + int(self.residual)
+
+    @property
+    def n_ops(self) -> int:
+        """Separate XLA elementwise kernels the unfused formulation needs."""
+        return (int(self.bias) + int(self.activation is not None)
+                + int(self.residual))
+
+    def __str__(self) -> str:
+        if self.is_identity:
+            return "none"
+        parts = ([] if not self.bias else ["bias"]) \
+            + ([self.activation] if self.activation else []) \
+            + (["residual"] if self.residual else [])
+        return "+".join(parts)
+
+
+EPILOGUE_NONE = Epilogue()
+
+
 @dataclass(frozen=True)
 class GemmProblem:
-    """C[M,N] = A[M,K] @ B[K,N], optionally batched (leading dim)."""
+    """C[M,N] = epilogue(A[M,K] @ B[K,N]), optionally batched (leading dim)."""
 
     M: int
     N: int
@@ -53,6 +113,7 @@ class GemmProblem:
     in_dtype: str = "bfloat16"
     out_dtype: str = "float32"
     batch: int = 1
+    epilogue: Epilogue = EPILOGUE_NONE
 
     def __post_init__(self):
         if min(self.M, self.N, self.K, self.batch) < 1:
@@ -64,10 +125,14 @@ class GemmProblem:
 
     @property
     def min_bytes(self) -> float:
-        """Compulsory traffic: read A and B once, write C once."""
+        """Compulsory traffic: read A, B and epilogue operands once, write C
+        once."""
         bi, bo = DTYPE_BYTES[self.in_dtype], DTYPE_BYTES[self.out_dtype]
+        ep = self.epilogue
+        e_bytes = (ep.n_mn_operands * self.M * self.N
+                   + (self.N if ep.bias else 0)) * bi
         return self.batch * ((self.M * self.K + self.K * self.N) * bi
-                             + self.M * self.N * bo)
+                             + self.M * self.N * bo + e_bytes)
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -146,7 +211,9 @@ def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     N_MI x L_MI, with L_MI expressed through peak FLOP/s).
     VMEM term: bytes the step streams through the VMEM<->VREG port — both
     input blocks once, plus the f32 accumulator read+write (the accumulator
-    lives in VMEM scratch across the k loop).
+    lives in VMEM scratch across the k loop), plus the epilogue operands
+    (read once per output tile at the flush, amortized over the tile's
+    k steps).
     """
     mm, mn, mk = hw.mxu_shape
     n_atoms = cdiv(t.bm, mm) * cdiv(t.bn, mn) * cdiv(t.bk, mk)
@@ -156,7 +223,11 @@ def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     bi = DTYPE_BYTES[p.in_dtype]
     in_bytes = (t.bm * t.bk + t.bk * t.bn) * bi
     acc_bytes = 2 * t.bm * t.bn * 4          # f32 accumulator read + write
-    vmem = (in_bytes + acc_bytes) / hw.vmem_bandwidth
+    ep = p.epilogue
+    _, _, Tk = grid_shape(p, t)
+    e_bytes = (ep.n_mn_operands * t.bm * t.bn
+               + (t.bn if ep.bias else 0)) * bi / Tk
+    vmem = (in_bytes + acc_bytes + e_bytes) / hw.vmem_bandwidth
     return mxu, vmem
 
 
@@ -195,6 +266,12 @@ def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
 
     Without revisits: A is fetched Tn times over, B Tm times over
     (the paper's "uncached reads" U, Alg. 5, with hit rate applied).
+
+    Split-K runs *in-kernel* (one ``pallas_call``, grid ``(tiles, sk, Tk)``,
+    k-shards accumulated in VMEM scratch, single flush) so it moves no HBM
+    partials — its only residual cost is the extra K padding already captured
+    by ``grid_shape``.  Epilogue operands (bias / gate / residual) are read
+    once per output tile; fused, the output is still written exactly once.
     """
     Tm, Tn, Tk = grid_shape(p, t)
     bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
@@ -204,10 +281,29 @@ def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
     a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
     b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
     c_bytes = p.M * p.N * bo
-    if t.split_k > 1:
-        # Partials: split_k-1 extra f32 write+read+final read-modify-write.
-        c_bytes += 2.0 * (t.split_k - 1) * p.M * p.N * 4
-    return p.batch * (a_bytes + b_bytes + c_bytes)
+    ep = p.epilogue
+    e_bytes = (ep.n_mn_operands * p.M * p.N + (p.N if ep.bias else 0)) * bi
+    return p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
+
+
+def epilogue_unfused_extra_bytes(p: GemmProblem) -> float:
+    """Extra HBM bytes when the epilogue runs as separate XLA elementwise ops
+    after the GEMM instead of inside the flush (DESIGN.md §3).
+
+    Each post-op re-reads and re-writes the full (M, N) output; gate and
+    residual ops additionally read their (M, N) operand, bias its (N,) row.
+    The fused kernel pays only the operand reads (already in
+    ``hbm_traffic``), so the *fusion saving* is exactly this value minus the
+    operand reads — i.e. 2*M*N*out_bytes per post-op.
+    """
+    ep = p.epilogue
+    bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
+    mn = p.batch * p.M * p.N
+    extra = 2.0 * ep.n_ops * mn * bo                 # read + write per op
+    extra += ep.n_mn_operands * mn * bi              # gate / residual reads
+    if ep.bias:
+        extra += p.batch * p.N * bi
+    return extra
 
 
 def reuse_fraction(p: GemmProblem, t: TileConfig) -> float:
@@ -294,7 +390,12 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
 
     Identical arithmetic, no dataclass allocation — used to rank the whole
     candidate space in O(P) with per-candidate cost in the ~µs range (the
-    paper's selection-overhead claim, Table II)."""
+    paper's selection-overhead claim, Table II).
+
+    NB: this formula exists in three hand-synced copies — here, the
+    vectorized ``score_candidates``/``score_candidate_arrays`` below, and
+    the static-term-cached ``selector.select_fast`` — change all three;
+    parity is pinned by tests/test_selector.py."""
     bm, bn, bk = t.bm, t.bn, t.bk
     Tm = -(-p.M // bm)
     Tn = -(-p.N // bn)
@@ -308,7 +409,11 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
 
     bi = DTYPE_BYTES[p.in_dtype]
     bo = DTYPE_BYTES[p.out_dtype]
-    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn) / hw.vmem_bandwidth
+    ep = p.epilogue
+    n_mn, has_bias = ep.n_mn_operands, int(ep.bias)
+    e_vmem = (n_mn * bm * bn + has_bias * bn) * bi / Tk
+    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn
+              + e_vmem) / hw.vmem_bandwidth
 
     # revisit fractions (inlined)
     if Tk != 1:
@@ -321,12 +426,71 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
     b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
     c_bytes = p.M * p.N * bo
-    if t.split_k > 1:
-        c_bytes += 2.0 * (t.split_k - 1) * p.M * p.N * 4
-    traffic = p.batch * (a_bytes + b_bytes + c_bytes)
+    e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
+    traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
     hbm_s = traffic / hw.hbm_bandwidth / steps
     l_iter = max(max(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
+    epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
+    return hw.kernel_launch + prologue + epilogue + steps * l_iter
+
+
+def score_candidates(p: GemmProblem, tiles: Sequence[TileConfig],
+                     hw: HardwareSpec) -> np.ndarray:
+    """Vectorized ``score_candidate``: one numpy pass over the whole candidate
+    array instead of a Python loop — this is what makes *cold* selection cheap
+    (the paper's Table II selection-overhead claim; the cached path was always
+    ~1 µs).  Returns total seconds per candidate, same arithmetic as the
+    scalar path (float64 throughout, identical operation structure)."""
+    n = len(tiles)
+    bm = np.fromiter((t.bm for t in tiles), np.int64, n)
+    bn = np.fromiter((t.bn for t in tiles), np.int64, n)
+    bk = np.fromiter((t.bk for t in tiles), np.int64, n)
+    sk = np.fromiter((t.split_k for t in tiles), np.int64, n)
+    gm = np.fromiter((t.group_m for t in tiles), np.int64, n)
+    return score_candidate_arrays(p, bm, bn, bk, sk, gm, hw)
+
+
+def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
+                           bk: np.ndarray, sk: np.ndarray, gm: np.ndarray,
+                           hw: HardwareSpec) -> np.ndarray:
+    """``score_candidates`` on raw int64 column arrays (no TileConfig
+    objects) — the selector's fully-vectorized cold path feeds the enumerated
+    candidate columns straight in."""
+    Tm = -(-p.M // bm)
+    Tn = -(-p.N // bn)
+    k_per_split = -(-p.K // sk)
+    Tk = -(-k_per_split // bk) * sk
+    steps = (Tm * Tn * Tk * p.batch).astype(np.float64)
+
+    mm, mn, mk = hw.mxu_shape
+    n_atoms = (-(-bm // mm)) * (-(-bn // mn)) * (-(-bk // mk))
+    mxu_s = n_atoms * (2.0 * mm * mn * mk) / hw.flops(p.in_dtype)
+
+    bi = DTYPE_BYTES[p.in_dtype]
+    bo = DTYPE_BYTES[p.out_dtype]
+    ep = p.epilogue
+    n_mn, has_bias = ep.n_mn_operands, int(ep.bias)
+    e_vmem = (n_mn * bm * bn + has_bias * bn) * bi / Tk
+    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn
+              + e_vmem) / hw.vmem_bandwidth
+
+    # revisit fractions (vectorized): A skipped on n-advance (ungrouped),
+    # B skipped on m-advance within a group (grouped), both need Tk == 1.
+    a_skip = np.where((Tk == 1) & (gm <= 1) & (Tn > 0),
+                      (Tn - 1) / np.maximum(Tn, 1), 0.0)
+    g = np.minimum(gm, Tm)
+    b_skip = np.where((Tk == 1) & (gm > 1),
+                      (g - 1) / np.maximum(g, 1), 0.0)
+    a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
+    b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
+    c_bytes = p.M * p.N * bo
+    e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
+    traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
+
+    hbm_s = traffic / hw.hbm_bandwidth / steps
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter

@@ -16,8 +16,12 @@ import itertools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
 from repro.core.latency import (
+    EPILOGUE_NONE,
+    Epilogue,
     GemmProblem,
     LatencyBreakdown,
     TileConfig,
@@ -26,6 +30,7 @@ from repro.core.latency import (
     grid_shape,
     round_up,
     score_candidate,
+    score_candidates,
     vmem_working_set,
 )
 
@@ -77,6 +82,12 @@ def candidate_tiles(
          revisit model can trigger (Tk == 1); split_k only when the grid is
          small enough for fill/drain to matter (deterministic, part of the
          model, keeps P near the paper's 50-150).
+
+    NB: with split-K now *in-kernel* (sequential grid, one flush, no HBM
+    partials) the model scores sk>1 as never better than its sk=1 twin —
+    the GPU occupancy rationale has no TPU analogue — so selection always
+    returns sk=1; split-K stays in the space for explicitly-passed configs
+    and future multi-core shard scheduling (DESIGN.md §3).
     """
     sub = hw.sublane(p.in_dtype)
     lane = hw.lane_width
@@ -112,6 +123,176 @@ def candidate_tiles(
     return out
 
 
+_GRID_CACHE: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
+
+
+def _menu_grid(hw: HardwareSpec, in_dtype: str) -> Tuple[np.ndarray, ...]:
+    """Static part of the candidate space for (hardware, dtype): the full
+    lexicographic (bm, bn, bk, sk, gm) menu grid plus the problem-independent
+    alignment + VMEM-capacity keep-mask.  Cached — cold selection only pays
+    for the problem-dependent masks and the scoring pass."""
+    key = (hw.name, in_dtype)
+    hit = _GRID_CACHE.get(key)
+    if hit is not None:
+        return hit
+    bm, bn, bk, sk, gm = (g.ravel() for g in np.meshgrid(
+        np.asarray(_BM_MENU, np.int64), np.asarray(_BN_MENU, np.int64),
+        np.asarray(_BK_MENU, np.int64), np.asarray(_SPLIT_K_MENU, np.int64),
+        np.asarray(_GROUP_M_MENU, np.int64), indexing="ij"))
+    sub, lane = hw.sublane(in_dtype), hw.lane_width
+    bi = DTYPE_BYTES[in_dtype]
+    static_keep = (bm % sub == 0) & (bn % lane == 0) & (bk % lane == 0)
+    working_set = hw.pipeline_depth * (bm * bk + bk * bn) * bi + bm * bn * 4
+    static_keep &= working_set <= hw.vmem_budget()
+    # All menu entries are powers of two: ceil-divs become shifts, and the
+    # split-K / grouping gate masks are grid-static (int64 floordiv is the
+    # single most expensive numpy op on the cold path).
+    shifts = tuple(np.log2(c).astype(np.int64) for c in (bm, bn, bk, sk))
+    masks = (sk > 1, gm > 1, gm <= 1)
+    out = (bm, bn, bk, sk, gm, static_keep, shifts, masks)
+    _GRID_CACHE[key] = out
+    return out
+
+
+def _menu_cut(menu: Sequence[int], extent: int, align: int) -> int:
+    """Largest useful menu entry: the smallest aligned entry >= the padded
+    extent (anything above is pure padding waste) — ``useful``'s cut."""
+    padded = round_up(extent, align)
+    keep = [m for m in menu if m % align == 0]
+    return next((m for m in keep if m >= padded), keep[-1])
+
+
+def _keep_mask(p: GemmProblem, hw: HardwareSpec, allow_split_k: bool,
+               allow_grouping: bool) -> np.ndarray:
+    """Problem-dependent candidate filter over the full menu grid —
+    candidate_tiles' usefulness / split-K / grouping rules, vectorized."""
+    (bm, bn, bk, sk, gm, static_keep,
+     (bm_sh, bn_sh, bk_sh, sk_sh), (sk_gt1, gm_gt1, _)) = \
+        _menu_grid(hw, p.in_dtype)
+    sub = hw.sublane(p.in_dtype)
+    lane = hw.lane_width
+
+    keep = static_keep \
+        & (bm <= _menu_cut(_BM_MENU, p.M, sub)) \
+        & (bn <= _menu_cut(_BN_MENU, p.N, lane)) \
+        & (bk <= _menu_cut(_BK_MENU, p.K, lane))
+    if not allow_split_k:
+        keep = keep & ~sk_gt1
+    if not allow_grouping:
+        keep = keep & ~gm_gt1
+
+    Tm = (p.M - 1 + bm) >> bm_sh                       # cdiv via shift
+    Tn = (p.N - 1 + bn) >> bn_sh
+    keep = keep & ~(sk_gt1 & ((((p.K - 1 + sk) >> sk_sh) < bk)
+                              | (Tm * Tn * p.batch >= 16)))
+    keep = keep & ~(gm_gt1 & ((((p.K - 1 + bk) >> bk_sh) != 1) | (Tm < 2)))
+    return keep
+
+
+def candidate_arrays(
+    p: GemmProblem,
+    hw: HardwareSpec = TPU_V5E,
+    *,
+    allow_split_k: bool = True,
+    allow_grouping: bool = True,
+) -> Tuple[np.ndarray, ...]:
+    """``candidate_tiles`` fully vectorized: returns (bm, bn, bk, split_k,
+    group_m) int64 column arrays with the SAME filters and the SAME
+    enumeration order, without materializing TileConfig objects — the cold
+    selection path builds only the winning config."""
+    bm, bn, bk, sk, gm = _menu_grid(hw, p.in_dtype)[:5]
+    keep = _keep_mask(p, hw, allow_split_k, allow_grouping)
+    return bm[keep], bn[keep], bk[keep], sk[keep], gm[keep]
+
+
+_STATIC_TERMS: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
+
+
+def _static_score_terms(hw: HardwareSpec, in_dtype: str,
+                        out_dtype: str) -> Tuple[np.ndarray, ...]:
+    """Score terms over the full menu grid that don't depend on the problem
+    shape: MXU step seconds, the VMEM-port step seconds base, bm*bn, and the
+    launch+prologue+epilogue fill/drain seconds.  Cached per (hardware,
+    dtypes) — the cold path computes only shape-dependent terms."""
+    key = (hw.name, in_dtype, out_dtype)
+    hit = _STATIC_TERMS.get(key)
+    if hit is not None:
+        return hit
+    bm, bn, bk = _menu_grid(hw, in_dtype)[:3]
+    bi, bo = DTYPE_BYTES[in_dtype], DTYPE_BYTES[out_dtype]
+    mm, mn, mk = hw.mxu_shape
+    n_atoms = (-(-bm // mm)) * (-(-bn // mn)) * (-(-bk // mk))
+    mxu_s = n_atoms * (2.0 * mm * mn * mk) / hw.flops(in_dtype)
+    ab_bi = (bm * bk + bk * bn) * bi
+    bmn = bm * bn
+    vmem_base_s = (ab_bi + 8.0 * bmn) / hw.vmem_bandwidth
+    fill_drain = (hw.kernel_launch + 2 * hw.hbm_latency
+                  + ab_bi / hw.hbm_bandwidth + bmn * bo / hw.hbm_bandwidth)
+    vols = bmn * bk
+    out = (mxu_s, vmem_base_s, bmn, fill_drain, vols)
+    _STATIC_TERMS[key] = out
+    return out
+
+
+def select_fast(p: GemmProblem, hw: HardwareSpec, *,
+                allow_split_k: bool = True,
+                allow_grouping: bool = True) -> Tuple[TileConfig, int]:
+    """The fully-vectorized cold selection: one numpy pass over the menu grid
+    (static terms cached) -> (winning TileConfig, n_candidates).  Same
+    model arithmetic as ``score_candidate`` and the same argmin/tie-break as
+    the sequential scoring loop.
+
+    NB: the scoring formula is deliberately inlined here (third copy, after
+    ``score_candidate`` and ``score_candidate_arrays``) so the static
+    per-(hw, dtypes) terms and shift-based ceil-divs can be cached — a model
+    change must touch all three; ``tests/test_selector.py`` pins their
+    pairwise parity."""
+    (bm, bn, bk, sk, gm, _,
+     (bm_sh, bn_sh, bk_sh, sk_sh), (_, gm_gt1, gm_le1)) = \
+        _menu_grid(hw, p.in_dtype)
+    mxu_s, vmem_base_s, bmn, fill_drain, vols = _static_score_terms(
+        hw, p.in_dtype, p.out_dtype)
+    keep = _keep_mask(p, hw, allow_split_k, allow_grouping)
+    n_cands = int(np.count_nonzero(keep))
+    if n_cands == 0:
+        raise ValueError(f"empty candidate space for {p} on {hw.name}")
+
+    bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
+    Tm = (p.M - 1 + bm) >> bm_sh                       # cdiv via shift
+    Tn = (p.N - 1 + bn) >> bn_sh
+    k_per_split = (p.K - 1 + sk) >> sk_sh
+    Tk = ((k_per_split - 1 + bk) >> bk_sh) << sk_sh
+    steps = Tm * Tn * Tk * p.batch
+
+    ep = p.epilogue
+    if ep.is_identity:
+        vmem_s = vmem_base_s
+        ce_bytes = float(p.M * p.N * bo)
+    else:
+        vmem_s = vmem_base_s + (ep.n_mn_operands * bmn
+                                + int(ep.bias) * bn) * bi / Tk \
+            / hw.vmem_bandwidth
+        ce_bytes = float(p.M * p.N * bo
+                         + (ep.n_mn_operands * p.M * p.N
+                            + int(ep.bias) * p.N) * bi)
+
+    tk1 = Tk == 1
+    a_skip = (tk1 & gm_le1) * ((Tn - 1) / Tn)
+    g = np.minimum(gm, Tm)
+    b_skip = (tk1 & gm_gt1) * ((g - 1) / g)
+    a_bytes = Tn * float(p.M * p.K * bi) * (1.0 - a_skip)
+    b_bytes = Tm * float(p.K * p.N * bi) * (1.0 - b_skip)
+    traffic = p.batch * (a_bytes + b_bytes + ce_bytes)
+
+    hbm_s = traffic / hw.hbm_bandwidth / steps
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
+    idx = np.flatnonzero(scores <= scores.min() + 1e-15)
+    i = int(idx[np.argmax(vols[idx])])
+    return TileConfig(bm=int(bm[i]), bn=int(bn[i]), bk=int(bk[i]),
+                      split_k=int(sk[i]), group_m=int(gm[i])), n_cands
+
+
 def rank_candidates(
     p: GemmProblem,
     hw: HardwareSpec = TPU_V5E,
@@ -131,6 +312,27 @@ def rank_candidates(
 _CACHE: Dict[Tuple, Selection] = {}
 
 
+def _argmin_index(scores: np.ndarray, bm: np.ndarray, bn: np.ndarray,
+                  bk: np.ndarray) -> int:
+    """Deterministic tie-break: within 1e-15 s of the minimum prefer the
+    larger block volume (less issue overhead), then the earliest candidate in
+    enumeration order — the same policy the scalar scoring loop applied."""
+    idx = np.flatnonzero(scores <= scores.min() + 1e-15)
+    vols = bm[idx] * bn[idx] * bk[idx]
+    return int(idx[np.argmax(vols)])
+
+
+def argmin_candidate(p: GemmProblem, cands: Sequence[TileConfig],
+                     hw: HardwareSpec) -> TileConfig:
+    """Vectorized argmin over an explicit candidate list."""
+    scores = score_candidates(p, cands, hw)
+    n = len(cands)
+    bm = np.fromiter((t.bm for t in cands), np.int64, n)
+    bn = np.fromiter((t.bn for t in cands), np.int64, n)
+    bk = np.fromiter((t.bk for t in cands), np.int64, n)
+    return cands[_argmin_index(scores, bm, bn, bk)]
+
+
 def select_gemm_config(
     M: int,
     N: int,
@@ -139,35 +341,32 @@ def select_gemm_config(
     in_dtype: str = "bfloat16",
     out_dtype: str = "float32",
     batch: int = 1,
+    epilogue: Optional[Epilogue] = None,
     hw: HardwareSpec = TPU_V5E,
     allow_split_k: bool = True,
     allow_grouping: bool = True,
 ) -> Selection:
     """The paper's API: problem shape in, near-optimal TileConfig out.
 
-    Zero autotuning. Deterministic. Memoised per (problem, hardware)."""
-    key = (M, N, K, in_dtype, out_dtype, batch, hw.name,
+    Zero autotuning. Deterministic. Memoised per (problem, hardware).
+    ``epilogue`` prices the fused flush work (extra operand reads) so
+    candidates are ranked against the *fused* traffic."""
+    ep = epilogue or EPILOGUE_NONE
+    key = (M, N, K, in_dtype, out_dtype, batch, ep, hw.name,
            allow_split_k, allow_grouping)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
 
     p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
-                    out_dtype=out_dtype, batch=batch)
-    cands = candidate_tiles(p, hw, allow_split_k=allow_split_k,
-                            allow_grouping=allow_grouping)
-    if not cands:
-        raise ValueError(f"empty candidate space for {p} on {hw.name}")
-    # Fast O(P) scoring pass (Table II claim); full breakdown for winner only.
-    best, best_score = None, None
-    for t in cands:
-        s = score_candidate(p, t, hw)
-        if best_score is None or s < best_score - 1e-15 or (
-                abs(s - best_score) <= 1e-15
-                and (t.bm * t.bn * t.bk) > (best.bm * best.bn * best.bk)):
-            best, best_score = t, s
+                    out_dtype=out_dtype, batch=batch, epilogue=ep)
+    # Fast O(P) scoring pass (Table II claim): enumeration, filtering and
+    # scoring are all one numpy batch — only the winning TileConfig is ever
+    # materialized; full latency breakdown for the winner only.
+    best, n_cands = select_fast(p, hw, allow_split_k=allow_split_k,
+                                allow_grouping=allow_grouping)
     sel = Selection(problem=p, config=best, predicted=gemm_latency(p, best, hw),
-                    hardware=hw.name, n_candidates=len(cands))
+                    hardware=hw.name, n_candidates=n_cands)
     _CACHE[key] = sel
     return sel
 

@@ -13,7 +13,11 @@ the machine at a strictly finer granularity than the closed-form model in
 * an explicit two-stage max-plus pipeline recurrence with finite buffer depth
   (``hw.pipeline_depth``), not a steady-state max(),
 * output writebacks serialized on the same DMA engine as input fetches,
-* split-K partial buffers plus the f32 combine pass.
+* in-kernel split-K: the grid is ``(tiles, sk, Tk)`` and the f32 accumulator
+  carries across all of a tile's k-shards, so there is no HBM partial buffer
+  and no combine pass — only the per-shard K padding,
+* fused epilogue operands (bias / gate / residual) fetched once per output
+  tile at the flush.
 
 It shares nothing with ``latency.py`` but the HardwareSpec constants.
 
@@ -114,19 +118,22 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
         dma_cursor = start + bytes_ / bw + hw.dma_fixed
         total_bytes += bytes_
 
+    ep = p.epilogue
     for _ in range(p.batch):
-        for s in range(t.split_k):
-            k_lo = s * k_extent
-            k_hi = min(p.K, (s + 1) * k_extent)
-            prev_a = prev_b = None
-            for (i, j) in _tile_order(Tm, Tn, t.group_m):
-                em = min(t.bm, p.M - i * t.bm)        # real edge extents
-                en = min(t.bn, p.N - j * t.bn)
-                # Per-step fetch bytes within this tile (constant over k).
+        prev_a = prev_b = None
+        for (i, j) in _tile_order(Tm, Tn, t.group_m):
+            em = min(t.bm, p.M - i * t.bm)            # real edge extents
+            en = min(t.bn, p.N - j * t.bn)
+            # k-shards run back-to-back inside the tile (grid (tiles, sk, Tk),
+            # s middle, k inner); the accumulator carries across all of them.
+            for s in range(t.split_k):
+                k_lo = s * k_extent
+                k_hi = min(p.K, (s + 1) * k_extent)
+                # Per-step fetch bytes within this shard (constant over k).
                 steps_here = Tk
                 first_fetches: List[float] = []
                 for kk in range(min(steps_here, _EXPLICIT)):
-                    ek = min(t.bk, (k_hi - k_lo) - kk * t.bk)
+                    ek = max(0, min(t.bk, (k_hi - k_lo) - kk * t.bk))
                     a_idx, b_idx = (i, s, kk), (s, kk, j)
                     fa = 0.0 if a_idx == prev_a else em * ek * bi
                     fb = 0.0 if b_idx == prev_b else ek * en * bi
@@ -138,7 +145,6 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
                 if rest > 0:
                     # Settled linear regime: constant fetch (interior k) and
                     # constant compute -> both cursors advance by the slope.
-                    ek = t.bk if (k_hi - k_lo) % t.bk == 0 else t.bk
                     f = (em * t.bk + t.bk * en) * bi
                     # last k block may be ragged; simulate it explicitly
                     ragged = (k_hi - k_lo) % t.bk
@@ -167,16 +173,11 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
                         fb = ek * en * bi
                         prev_a, prev_b = a_idx, b_idx
                         run_step(fa + fb)
-                # Accumulator flush for this output tile.
-                wb = em * en * (4 if t.split_k > 1 else bo)
-                write_back(wb)
-
-    if t.split_k > 1:
-        # Combine pass: read split_k f32 partials, write final out_dtype.
-        rd = t.split_k * p.M * p.N * 4 * p.batch
-        wr = p.M * p.N * bo * p.batch
-        write_back(rd + wr)
-        comp_cursor = max(comp_cursor, dma_cursor) + hw.kernel_launch
+            # Epilogue operand fetch + single accumulator flush per tile
+            # (split-K included: no HBM partials, no combine pass).
+            e_fetch = (ep.n_mn_operands * em * en
+                       + (en if ep.bias else 0)) * bi
+            write_back(em * en * bo + e_fetch)
 
     end = max(comp_cursor, dma_cursor)
     return SimResult(time=end, hbm_bytes=total_bytes,

@@ -21,6 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:                                   # jax >= 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
 from repro.core.latency import GemmProblem
 from repro.core.selector import select_gemm_config
@@ -96,5 +101,5 @@ def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "model",
         def f(xl, wl):
             return kops.matmul(xl, wl, backend=backend)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_spec)(x, w)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_spec)(x, w)

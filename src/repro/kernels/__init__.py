@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the perf-critical hot spots + selector-driven ops."""
+from repro.core.latency import EPILOGUE_NONE, Epilogue
 from repro.kernels.ops import (
+    expert_matmul,
     flash_attention,
     get_backend,
     matmul,
@@ -7,5 +9,6 @@ from repro.kernels.ops import (
 )
 from repro.kernels.flash_attention import select_attention_blocks
 
-__all__ = ["flash_attention", "get_backend", "matmul", "set_backend",
+__all__ = ["EPILOGUE_NONE", "Epilogue", "expert_matmul", "flash_attention",
+           "get_backend", "matmul", "set_backend",
            "select_attention_blocks"]

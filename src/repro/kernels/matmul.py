@@ -2,20 +2,26 @@
 
 This is the tritonBLAS kernel ported to the TPU execution model: one kernel
 template whose BlockSpec tiling (bm, bn, bk), grid iteration order (grouped
-row swizzle) and split-K factor are *runtime parameters chosen analytically*
-— never autotuned.
+row swizzle), split-K factor and fused epilogue are *runtime parameters
+chosen analytically* — never autotuned.
 
-Grid layout: ``(num_output_tiles, Tk)`` with k innermost (the Pallas grid is
-iterated row-major, last dim fastest), so the f32 accumulator scratch carries
-across the k loop and flushes on the last k step.  The grouped iteration
-order (paper Alg. 6's cache-tile factorization; on TPU it selects which
-operand benefits from the Mosaic revisit-skip) is folded into the index maps.
+Grid layout: ``(num_output_tiles, split_k, Tk)`` iterated row-major (k
+fastest, then the k-shard index), so the f32 accumulator scratch carries
+across ALL of a tile's k-shards and flushes exactly once — split-K is
+*in-kernel*: no ``(sk, M, N)`` HBM partial tensor, no follow-up combine pass.
+The grouped iteration order (paper Alg. 6's cache-tile factorization; on TPU
+it selects which operand benefits from the Mosaic revisit-skip) is folded
+into the index maps.
+
+The epilogue (bias add, gelu/silu/swiglu-gate, residual add, out-dtype cast
+— see ``repro.core.latency.Epilogue``) runs inside the flush step on the f32
+accumulator, removing the full-output HBM round trips XLA would spend on
+separate post-ops (DESIGN.md §3).
 
 Inputs must be pre-padded to block multiples — ``ops.matmul`` does this.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -23,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.latency import TileConfig, cdiv
+from repro.core.latency import EPILOGUE_NONE, Epilogue, TileConfig, cdiv
 
 
 def _swizzle(pid, Tm: int, Tn: int, group_m: int):
@@ -40,19 +46,50 @@ def _swizzle(pid, Tm: int, Tn: int, group_m: int):
     return pid_m, pid_n
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
-    k = pl.program_id(1)
+def _apply_epilogue(acc, ep: Epilogue, bias_ref, gate_ref, res_ref):
+    """Flush-step epilogue on the f32 accumulator (order: DESIGN.md §3)."""
+    if ep.bias:
+        acc = acc + bias_ref[...].astype(jnp.float32)
+    if ep.activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif ep.activation == "silu":
+        acc = jax.nn.silu(acc)
+    elif ep.activation == "swiglu_gate":
+        acc = jax.nn.silu(acc) * gate_ref[...].astype(jnp.float32)
+    if ep.residual:
+        acc = acc + res_ref[...].astype(jnp.float32)
+    return acc
 
-    @pl.when(k == 0)
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+def _make_kernel(ep: Epilogue, n_sk: int, n_k: int, out_dtype):
+    def kernel(*refs):
+        a_ref, b_ref = refs[0], refs[1]
+        i = 2
+        bias_ref = gate_ref = res_ref = None
+        if ep.bias:
+            bias_ref, i = refs[i], i + 1
+        if ep.activation == "swiglu_gate":
+            gate_ref, i = refs[i], i + 1
+        if ep.residual:
+            res_ref, i = refs[i], i + 1
+        o_ref, acc_ref = refs[i], refs[i + 1]
 
-    @pl.when(k == n_k - 1)
-    def _flush():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        s, k = pl.program_id(1), pl.program_id(2)
+
+        @pl.when((s == 0) & (k == 0))
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when((s == n_sk - 1) & (k == n_k - 1))
+        def _flush():
+            acc = _apply_epilogue(acc_ref[...], ep,
+                                  bias_ref, gate_ref, res_ref)
+            o_ref[...] = acc.astype(out_dtype)
+
+    return kernel
 
 
 def matmul_pallas(
@@ -61,67 +98,76 @@ def matmul_pallas(
     config: TileConfig,
     *,
     out_dtype=jnp.float32,
+    epilogue: Optional[Epilogue] = None,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """C = A @ B with A:(M,K), B:(K,N) already padded to block multiples."""
+    """C = epilogue(A @ B) with A:(M,K), B:(K,N) already padded to block
+    multiples (K to ``bk * split_k``).  Epilogue operands, when present, are
+    padded alongside the output: bias (1, N), gate/residual (M, N).
+
+    One ``pallas_call`` regardless of split_k: k-shards accumulate into the
+    VMEM scratch and the output is written exactly once.
+    """
+    ep = epilogue or EPILOGUE_NONE
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
     bm, bn, bk = config.bm, config.bn, config.bk
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+    sk = config.split_k
+    assert M % bm == 0 and N % bn == 0 and K % (bk * sk) == 0, (
         f"inputs must be padded to blocks: {(M, N, K)} vs {config}")
-    Tm, Tn, Tk = M // bm, N // bn, K // bk
+    Tm, Tn = M // bm, N // bn
+    Tk = K // (bk * sk)                 # k blocks per shard
     gm = config.group_m
 
-    def a_index(pid, k):
+    def a_index(pid, s, k):
         pid_m, _ = _swizzle(pid, Tm, Tn, gm)
-        return pid_m, k
+        return pid_m, s * Tk + k
 
-    def b_index(pid, k):
+    def b_index(pid, s, k):
         _, pid_n = _swizzle(pid, Tm, Tn, gm)
-        return k, pid_n
+        return s * Tk + k, pid_n
 
-    def o_index(pid, k):
+    def out_index(pid, s, k):
         pid_m, pid_n = _swizzle(pid, Tm, Tn, gm)
         return pid_m, pid_n
 
-    kernel = functools.partial(_matmul_kernel, n_k=Tk, out_dtype=out_dtype)
+    def bias_index(pid, s, k):
+        _, pid_n = _swizzle(pid, Tm, Tn, gm)
+        return 0, pid_n
+
+    inputs = [a, b]
+    in_specs = [
+        pl.BlockSpec((bm, bk), a_index),
+        pl.BlockSpec((bk, bn), b_index),
+    ]
+    if ep.bias:
+        assert bias is not None and bias.shape == (1, N), (
+            "bias must be pre-shaped (1, N)", None if bias is None
+            else bias.shape)
+        inputs.append(bias)
+        in_specs.append(pl.BlockSpec((1, bn), bias_index))
+    if ep.activation == "swiglu_gate":
+        assert gate is not None and gate.shape == (M, N), (
+            "gate must be pre-padded (M, N)")
+        inputs.append(gate)
+        in_specs.append(pl.BlockSpec((bm, bn), out_index))
+    if ep.residual:
+        assert residual is not None and residual.shape == (M, N), (
+            "residual must be pre-padded (M, N)")
+        inputs.append(residual)
+        in_specs.append(pl.BlockSpec((bm, bn), out_index))
+
+    kernel = _make_kernel(ep, n_sk=sk, n_k=Tk, out_dtype=out_dtype)
     return pl.pallas_call(
         kernel,
-        grid=(Tm * Tn, Tk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), a_index),
-            pl.BlockSpec((bk, bn), b_index),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), o_index),
+        grid=(Tm * Tn, sk, Tk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), out_index),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a, b)
-
-
-def matmul_split_k(
-    a: jax.Array,
-    b: jax.Array,
-    config: TileConfig,
-    *,
-    out_dtype=jnp.float32,
-    interpret: bool = False,
-) -> jax.Array:
-    """Split-K variant (the paper's Stream-K analogue for small M*N grids):
-    partials over k-shards computed by a vmapped kernel, combined in f32."""
-    sk = config.split_k
-    M, K = a.shape
-    _, N = b.shape
-    assert K % sk == 0, (K, sk)
-    a_s = a.reshape(M, sk, K // sk).swapaxes(0, 1)          # (sk, M, K/sk)
-    b_s = b.reshape(sk, K // sk, N)                          # (sk, K/sk, N)
-    inner = functools.partial(
-        matmul_pallas,
-        config=TileConfig(bm=config.bm, bn=config.bn, bk=config.bk,
-                          split_k=1, group_m=config.group_m),
-        out_dtype=jnp.float32,
-        interpret=interpret,
-    )
-    partials = jax.vmap(lambda x, y: inner(x, y))(a_s, b_s)  # (sk, M, N) f32
-    return jnp.sum(partials, axis=0).astype(out_dtype)
+    )(*inputs)

@@ -17,20 +17,20 @@ deterministic, memoised.
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.hardware import TPU_V5E, HardwareSpec
-from repro.core.latency import TileConfig, cdiv
+from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.latency import EPILOGUE_NONE, Epilogue, TileConfig, cdiv
 from repro.core.selector import select_gemm_config
 from repro.kernels import ref
 from repro.kernels.flash_attention import (
     flash_attention_pallas,
     select_attention_blocks,
 )
-from repro.kernels.matmul import matmul_pallas, matmul_split_k
+from repro.kernels.matmul import matmul_pallas
 
 _BACKENDS = ("pallas", "pallas_interpret", "reference")
 _backend_override: Optional[str] = None
@@ -66,6 +66,41 @@ def _pad2(x: jax.Array, m: int, n: int) -> jax.Array:
     return x
 
 
+def _normalize_epilogue(
+    epilogue: Optional[Union[str, Epilogue]],
+    bias, gate, residual,
+) -> Epilogue:
+    """Accept an Epilogue spec, an activation-name shorthand, or infer the
+    spec from which operands were passed; validate operand presence."""
+    if isinstance(epilogue, Epilogue):
+        ep = epilogue
+    elif isinstance(epilogue, str):
+        ep = Epilogue(bias=bias is not None, activation=epilogue,
+                      residual=residual is not None)
+    else:
+        ep = Epilogue(bias=bias is not None,
+                      activation="swiglu_gate" if gate is not None else None,
+                      residual=residual is not None)
+    if ep.bias != (bias is not None):
+        raise ValueError(f"epilogue {ep} vs bias operand "
+                         f"{'present' if bias is not None else 'missing'}")
+    if (ep.activation == "swiglu_gate") != (gate is not None):
+        raise ValueError(f"epilogue {ep} vs gate operand "
+                         f"{'present' if gate is not None else 'missing'}")
+    if ep.residual != (residual is not None):
+        raise ValueError(f"epilogue {ep} vs residual operand "
+                         f"{'present' if residual is not None else 'missing'}")
+    return ep
+
+
+def _model_dtype_name(dt) -> str:
+    """The dtype name handed to the cost model — epilogue write bytes must be
+    priced in the TRUE out_dtype (bf16 halves them); fall back to f32 only
+    for dtypes the model has no byte width for."""
+    name = _dtype_name(dt)
+    return name if name in DTYPE_BYTES else "float32"
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,
@@ -74,32 +109,45 @@ def matmul(
     hw: HardwareSpec = TPU_V5E,
     config: Optional[TileConfig] = None,
     backend: Optional[str] = None,
+    epilogue: Optional[Union[str, Epilogue]] = None,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Selector-driven GEMM. a: (..., M, K) [leading dims folded], b: (K, N).
+    """Selector-driven fused GEMM: ``epilogue(a @ b)``.
 
-    The analytical selection uses the *local* (per-shard) static shapes, so
-    calling this under shard_map gives per-chip-optimal tiles — the intended
-    deployment (see distributed.collectives.tp_matmul).
+    a: (..., M, K) [leading dims folded], b: (K, N).  Epilogue operands:
+    bias (N,), gate/residual (..., M, N) matching a's leading dims.
+    ``epilogue`` may be an :class:`Epilogue`, an activation name shorthand
+    ("gelu" | "silu" | "swiglu_gate"), or omitted (inferred from operands).
+
+    The analytical selection uses the *local* (per-shard) static shapes and
+    the fused epilogue traffic, so calling this under shard_map gives
+    per-chip-optimal tiles — the intended deployment (see
+    distributed.collectives.tp_matmul).
     """
     be = backend or get_backend()
     out_dtype = out_dtype or a.dtype
+    ep = _normalize_epilogue(epilogue, bias, gate, residual)
     lead = a.shape[:-2] if a.ndim > 2 else ()
     M = 1
     for s in (*lead, a.shape[-2]):
         M *= s
     K, N = b.shape
     a2 = a.reshape(M, K)
+    gate2 = gate.reshape(M, N) if gate is not None else None
+    res2 = residual.reshape(M, N) if residual is not None else None
 
     if be == "reference":
-        out = ref.matmul_ref(a2, b, out_dtype=out_dtype)
+        out = ref.matmul_ref(a2, b, out_dtype=out_dtype, epilogue=ep,
+                             bias=bias, gate=gate2, residual=res2)
         return out.reshape(*lead, a.shape[-2], N) if lead else out
 
     if config is None:
         sel = select_gemm_config(M, N, K,
                                  in_dtype=_dtype_name(a.dtype),
-                                 out_dtype=_dtype_name(out_dtype)
-                                 if jnp.dtype(out_dtype) == jnp.float32
-                                 else "float32",
+                                 out_dtype=_model_dtype_name(out_dtype),
+                                 epilogue=ep,
                                  hw=hw)
         config = sel.config
     interpret = be == "pallas_interpret"
@@ -107,14 +155,72 @@ def matmul(
     sk = config.split_k
     a_p = _pad2(a2, config.bm, config.bk * sk)
     b_p = _pad2(b, config.bk * sk, config.bn)
-    if sk > 1:
-        out = matmul_split_k(a_p, b_p, config, out_dtype=out_dtype,
-                             interpret=interpret)
-    else:
-        out = matmul_pallas(a_p, b_p, config, out_dtype=out_dtype,
-                            interpret=interpret)
+    kw = {}
+    if ep.bias:
+        kw["bias"] = _pad2(bias.reshape(1, N), 1, config.bn)
+    if gate2 is not None:
+        kw["gate"] = _pad2(gate2, config.bm, config.bn)
+    if res2 is not None:
+        kw["residual"] = _pad2(res2, config.bm, config.bn)
+    out = matmul_pallas(a_p, b_p, config, out_dtype=out_dtype, epilogue=ep,
+                        interpret=interpret, **kw)
     out = out[:M, :N]
     return out.reshape(*lead, a.shape[-2], N) if lead else out
+
+
+def expert_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    out_dtype=None,
+    hw: HardwareSpec = TPU_V5E,
+    backend: Optional[str] = None,
+    epilogue: Optional[Union[str, Epilogue]] = None,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Grouped GEMM with per-group weights: x (E, M, K) @ w (E, K, N) ->
+    (E, M, N), with the same fused epilogue as :func:`matmul`.
+
+    This is exactly the paper's "batched or grouped GEMM dimensions" case
+    (§II-A): the selector prices the per-expert (M, K, N) contraction once
+    and every expert reuses the config.  Epilogue operands carry the leading
+    E dim: bias (E, N), gate/residual (E, M, N).
+    """
+    be = backend or get_backend()
+    out_dtype = out_dtype or x.dtype
+    ep = _normalize_epilogue(epilogue, bias, gate, residual)
+
+    if be == "reference":
+        acc = jnp.einsum("emk,ekn->emn", x, w,
+                         preferred_element_type=jnp.float32)
+        bias_b = bias[:, None, :] if bias is not None else None
+        acc = ref.apply_epilogue_ref(acc, ep, bias=bias_b, gate=gate,
+                                     residual=residual)
+        return acc.astype(out_dtype)
+
+    extras = []
+    if ep.bias:
+        extras.append(bias)
+    if ep.activation == "swiglu_gate":
+        extras.append(gate)
+    if ep.residual:
+        extras.append(residual)
+
+    def one(xi, wi, *ex):
+        it = iter(ex)
+        kw = {}
+        if ep.bias:
+            kw["bias"] = next(it)
+        if ep.activation == "swiglu_gate":
+            kw["gate"] = next(it)
+        if ep.residual:
+            kw["residual"] = next(it)
+        return matmul(xi, wi, out_dtype=out_dtype, hw=hw, backend=be,
+                      epilogue=ep, **kw)
+
+    return jax.vmap(one)(x, w, *extras)
 
 
 def flash_attention(

@@ -6,18 +6,60 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.latency import EPILOGUE_NONE, Epilogue
 
-def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
-    """C = A @ B. a: (..., M, K), b: (K, N).
 
-    For bf16 outputs the dot's preferred_element_type is bf16: the MXU still
-    accumulates in f32 internally, but TP partial sums then cross the ICI in
-    bf16 — halving the row-parallel all-reduce wire bytes (EXPERIMENTS.md
-    §Perf).  Other outputs keep explicit f32 accumulation."""
-    if jnp.dtype(out_dtype) == jnp.bfloat16:
-        return jnp.matmul(a, b, preferred_element_type=jnp.bfloat16)
-    return jnp.matmul(a, b,
-                      preferred_element_type=jnp.float32).astype(out_dtype)
+def apply_epilogue_ref(
+    acc: jax.Array,
+    ep: Epilogue,
+    *,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The fused kernel's flush-step epilogue, in f32, same operation order
+    (DESIGN.md §3): +bias -> activation (silu(y)*gate for swiglu_gate) ->
+    +residual.  Caller casts to out_dtype."""
+    acc = acc.astype(jnp.float32)
+    if ep.bias:
+        acc = acc + bias.astype(jnp.float32)
+    if ep.activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif ep.activation == "silu":
+        acc = jax.nn.silu(acc)
+    elif ep.activation == "swiglu_gate":
+        acc = jax.nn.silu(acc) * gate.astype(jnp.float32)
+    if ep.residual:
+        acc = acc + residual.astype(jnp.float32)
+    return acc
+
+
+def matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    out_dtype=jnp.float32,
+    *,
+    epilogue: Optional[Epilogue] = None,
+    bias: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+) -> jax.Array:
+    """C = epilogue(A @ B). a: (..., M, K), b: (K, N).
+
+    For bf16 outputs *without* an epilogue the dot's preferred_element_type
+    is bf16: the MXU still accumulates in f32 internally, but TP partial sums
+    then cross the ICI in bf16 — halving the row-parallel all-reduce wire
+    bytes (EXPERIMENTS.md §Perf).  Epilogue paths accumulate and fuse in f32
+    exactly like the kernel's flush, then cast."""
+    ep = epilogue or EPILOGUE_NONE
+    if ep.is_identity:
+        if jnp.dtype(out_dtype) == jnp.bfloat16:
+            return jnp.matmul(a, b, preferred_element_type=jnp.bfloat16)
+        return jnp.matmul(a, b,
+                          preferred_element_type=jnp.float32).astype(out_dtype)
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    acc = apply_epilogue_ref(acc, ep, bias=bias, gate=gate, residual=residual)
+    return acc.astype(out_dtype)
 
 
 def attention_ref(

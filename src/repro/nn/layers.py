@@ -105,9 +105,17 @@ def norm_defs(cfg: ModelConfig) -> Dict:
     return d
 
 
-def dense(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
-    """Selector-driven GEMM: x (..., K) @ w (K, N)."""
-    return kops.matmul(x, w, out_dtype=out_dtype or x.dtype)
+def dense(x: jax.Array, w: jax.Array, out_dtype=None, *,
+          epilogue=None, bias=None, gate=None,
+          residual=None) -> jax.Array:
+    """Selector-driven fused GEMM: epilogue(x (..., K) @ w (K, N)).
+
+    The epilogue (bias / gelu / silu / swiglu-gate / residual) executes
+    inside the kernel's flush step — one HBM round trip per layer instead of
+    one per post-op (DESIGN.md §3)."""
+    return kops.matmul(x, w, out_dtype=out_dtype or x.dtype,
+                       epilogue=epilogue, bias=bias, gate=gate,
+                       residual=residual)
 
 
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
@@ -162,6 +170,7 @@ def attn_forward(
     cfg: ModelConfig,
     *,
     positions: jax.Array,            # (S,)
+    residual: Optional[jax.Array] = None,   # fused into the wo GEMM's flush
 ) -> jax.Array:
     B, S, D = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -184,7 +193,7 @@ def attn_forward(
         out = attn_lib.chunked_attention(
             q, k, v, causal=True, sliding_window=cfg.sliding_window)
     out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
-    return dense(out, p["wo"])
+    return dense(out, p["wo"], residual=residual)
 
 
 def attn_decode(
@@ -233,10 +242,15 @@ def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
     }
 
 
-def mlp_forward(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def mlp_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                residual: Optional[jax.Array] = None) -> jax.Array:
+    """Fused MLP: activations run in the GEMM epilogues, never as separate
+    XLA elementwise passes; the block's residual add (when given) fuses into
+    the down-projection's flush."""
     h = norm(x, p["norm"], cfg)
     if cfg.activation == "swiglu":
-        g = dense(h, p["wg"])
         u = dense(h, p["wu"])
-        return dense(jax.nn.silu(g) * u, p["wd"])
-    return dense(jax.nn.gelu(dense(h, p["w1"])), p["w2"])
+        a = dense(h, p["wg"], epilogue="swiglu_gate", gate=u)
+        return dense(a, p["wd"], residual=residual)
+    h1 = dense(h, p["w1"], epilogue="gelu")
+    return dense(h1, p["w2"], residual=residual)

@@ -20,6 +20,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.nn.config import ModelConfig
 from repro.nn.layers import ParamDef, norm, norm_defs
 
@@ -128,9 +129,11 @@ def _dispatch_compute(p: Dict, flat: jax.Array, cfg: ModelConfig
     xe = buf[:-1].reshape(E, C, D)
 
     # ---- expert GEMMs (grouped; "experts" axis shardable) -------------
-    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
-    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
-    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+    # Selector-driven fused grouped GEMM: the silu-gate runs in the wg
+    # GEMM's epilogue, so the (E, C, F) activation makes one HBM round trip.
+    u = kops.expert_matmul(xe, p["wu"])
+    act = kops.expert_matmul(xe, p["wg"], epilogue="swiglu_gate", gate=u)
+    ye = kops.expert_matmul(act, p["wd"])
 
     # ---- combine -------------------------------------------------------
     y_copies = ye.reshape(E * C, D)

@@ -150,12 +150,14 @@ def forward_hidden(
     def body(carry, lp):
         h, aux = carry
         h = _sp(h, cfg)
-        h = h + L.attn_forward(lp["attn"], h, cfg, positions=positions)
+        # Residual adds fuse into the wo / wd GEMM flushes (f32 accumulator).
+        h = L.attn_forward(lp["attn"], h, cfg, positions=positions,
+                           residual=h)
         if cfg.is_moe:
             y, a = moe.moe_forward(lp["moe"], h, cfg)
             h, aux = h + y, aux + a
         else:
-            h = h + L.mlp_forward(lp["mlp"], h, cfg)
+            h = L.mlp_forward(lp["mlp"], h, cfg, residual=h)
         return (h, aux), None
 
     body = jax.checkpoint(body) if cfg.remat else body
@@ -173,8 +175,9 @@ def _hybrid_stack(params, x, positions, cfg):
     def group_body(h, gp):
         h = _sp(h, cfg)
         h, _ = scanning.scan(mamba_body, h, gp)
-        h = h + L.attn_forward(shared["attn"], h, cfg, positions=positions)
-        h = h + L.mlp_forward(shared["mlp"], h, cfg)
+        h = L.attn_forward(shared["attn"], h, cfg, positions=positions,
+                           residual=h)
+        h = L.mlp_forward(shared["mlp"], h, cfg, residual=h)
         return h, None
 
     gb = jax.checkpoint(group_body) if cfg.remat else group_body
@@ -217,12 +220,13 @@ def prefill_forward(
         def body(carry, lp):
             h = carry
             kv = _kv_for_cache(lp["attn"], h, positions, cfg)
-            h = h + L.attn_forward(lp["attn"], h, cfg, positions=positions)
+            h = L.attn_forward(lp["attn"], h, cfg, positions=positions,
+                               residual=h)
             if cfg.is_moe:
                 y, _ = moe.moe_forward(lp["moe"], h, cfg)
                 h = h + y
             else:
-                h = h + L.mlp_forward(lp["mlp"], h, cfg)
+                h = L.mlp_forward(lp["mlp"], h, cfg, residual=h)
             return h, kv
         x, cache = scanning.scan(body, x, params["layers"])
 
@@ -243,8 +247,9 @@ def _hybrid_prefill(params, x, positions, cfg):
     def group_body(h, gp):
         h, mc = scanning.scan(mamba_body, h, gp)
         kv = _kv_for_cache(shared["attn"], h, positions, cfg)
-        h = h + L.attn_forward(shared["attn"], h, cfg, positions=positions)
-        h = h + L.mlp_forward(shared["mlp"], h, cfg)
+        h = L.attn_forward(shared["attn"], h, cfg, positions=positions,
+                           residual=h)
+        h = L.mlp_forward(shared["mlp"], h, cfg, residual=h)
         return h, (mc, kv)
 
     head = _tree_take(params["layers"], 0, n_groups * g, (n_groups, g))

@@ -1,0 +1,76 @@
+"""Fallback property-testing shim for containers without ``hypothesis``.
+
+The real library is used when importable (CI installs it); otherwise this
+module provides just enough of the ``given``/``settings``/``strategies``
+surface for our tests: each ``@given`` test runs against a deterministic
+seeded sample of the strategy space instead of a shrinking search.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_N_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample            # rnd -> value
+
+    def map(self, fn):
+        return _Strategy(lambda rnd: fn(self.sample(rnd)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=16):
+    def sample(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.sample(rnd) for _ in range(n)]
+    return _Strategy(sample)
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+
+
+st = _St()
+strategies = st
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(0)
+            for _ in range(_N_EXAMPLES):
+                drawn_args = [s.sample(rnd) for s in arg_strats]
+                drawn_kw = {k: s.sample(rnd) for k, s in kw_strats.items()}
+                fn(*drawn_args, *args, **drawn_kw, **kwargs)
+        # Hide the strategy-supplied params from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[len(arg_strats):]
+        params = [p for p in params if p.name not in kw_strats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

@@ -17,6 +17,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                   # jax >= 0.5 exports it at top level
+    shard_map = jax.shard_map
+    _NO_REPCHECK = {"check_vma": False}
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+    _NO_REPCHECK = {"check_rep": False}   # pre-0.5 spelling
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.registry import get_config            # noqa: E402
@@ -90,11 +97,11 @@ def check_compressed_psum():
         mean, new_err = compressed_psum(gl, el, "data")
         return mean, new_err
 
-    # check_vma=False: the all_gather+local-reduce result is replicated by
-    # construction, but jax cannot prove invariance across "data".
-    mean, new_err = jax.shard_map(
+    # Replication check off: the all_gather+local-reduce result is replicated
+    # by construction, but jax cannot prove invariance across "data".
+    mean, new_err = shard_map(
         f, mesh=mesh, in_specs=(P("data"), P("data")),
-        out_specs=(P(None), P("data")), check_vma=False)(g, err)
+        out_specs=(P(None), P("data")), **_NO_REPCHECK)(g, err)
     # Each device's row of `mean` is the mean over devices within int8 error.
     want = np.asarray(jnp.mean(g, axis=0))
     got = np.asarray(mean)[0]

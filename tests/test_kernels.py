@@ -1,7 +1,11 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # CPU container: shim
+    from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +75,116 @@ def test_matmul_batched_leading_dims():
 )
 def test_matmul_property_random_shapes(M, N, K):
     _mm_case(M, N, K, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue: interpret-mode kernel vs the pure-jnp oracle.
+# ---------------------------------------------------------------------------
+
+from repro.core import Epilogue                              # noqa: E402
+from repro.kernels import expert_matmul                      # noqa: E402
+from repro.kernels.ref import apply_epilogue_ref             # noqa: E402
+
+EPILOGUES = [
+    Epilogue(bias=True),
+    Epilogue(activation="gelu"),
+    Epilogue(activation="silu"),
+    Epilogue(activation="swiglu_gate"),
+    Epilogue(bias=True, activation="gelu"),
+    Epilogue(residual=True),
+    Epilogue(bias=True, activation="swiglu_gate", residual=True),
+]
+
+
+def _ep_operands(ep, M, N, dt):
+    kw = {}
+    if ep.bias:
+        kw["bias"] = jnp.asarray(RNG.standard_normal(N), dtype=dt)
+    if ep.activation == "swiglu_gate":
+        kw["gate"] = jnp.asarray(RNG.standard_normal((M, N)), dtype=dt)
+    if ep.residual:
+        kw["residual"] = jnp.asarray(RNG.standard_normal((M, N)), dtype=dt)
+    return kw
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (128, 128, 128),       # aligned
+    (100, 300, 77),        # fully ragged (padding path)
+    (8, 256, 512),         # skinny M
+])
+@pytest.mark.parametrize("ep", EPILOGUES, ids=str)
+def test_matmul_epilogue_vs_ref(shape, dt, ep):
+    M, N, K = shape
+    a = jnp.asarray(RNG.standard_normal((M, K)), dtype=dt)
+    b = jnp.asarray(RNG.standard_normal((K, N)), dtype=dt)
+    kw = _ep_operands(ep, M, N, dt)
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    want = np.asarray(apply_epilogue_ref(acc, ep, **kw))
+    got = np.asarray(matmul(a, b, out_dtype=jnp.float32, epilogue=ep,
+                            backend="pallas_interpret", **kw))
+    rtol = 1e-5 if dt == jnp.float32 else 3e-2
+    atol = (1e-4 if dt == jnp.float32 else 0.3) * np.sqrt(K)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("ep", [Epilogue(), Epilogue(activation="gelu"),
+                                Epilogue(activation="swiglu_gate")], ids=str)
+def test_matmul_split_k_in_kernel(ep):
+    """Split-K fuses into ONE pallas_call: no (sk, M, N) HBM partials, no
+    combine reduction, epilogue still applied at the single flush."""
+    M, N, K = 64, 128, 2048
+    cfg = TileConfig(bm=64, bn=128, bk=256, split_k=4)
+    a = jnp.asarray(RNG.standard_normal((M, K)), dtype=jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((K, N)), dtype=jnp.float32)
+    kw = _ep_operands(ep, M, N, jnp.float32)
+
+    fn = lambda a, b: matmul(a, b, out_dtype=jnp.float32, config=cfg,
+                             epilogue=ep, backend="pallas_interpret", **kw)
+    jaxpr = jax.make_jaxpr(fn)(a, b)
+    calls = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "pallas_call"]
+    assert len(calls) == 1
+    sk_shape = (cfg.split_k, M, N)
+    for eqn in jaxpr.jaxpr.eqns:
+        for v in eqn.outvars:
+            assert tuple(getattr(v.aval, "shape", ())) != sk_shape
+
+    acc = jnp.matmul(a, b)
+    want = np.asarray(apply_epilogue_ref(acc, ep, **kw))
+    np.testing.assert_allclose(np.asarray(fn(a, b)), want,
+                               rtol=1e-5, atol=1e-4 * np.sqrt(K))
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_interpret"])
+def test_expert_matmul_grouped(backend):
+    E, C, D, F = 4, 24, 64, 96
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), dtype=jnp.float32)
+    wg = jnp.asarray(RNG.standard_normal((E, D, F)), dtype=jnp.float32)
+    wu = jnp.asarray(RNG.standard_normal((E, D, F)), dtype=jnp.float32)
+    u = expert_matmul(x, wu, backend=backend)
+    got = np.asarray(expert_matmul(x, wg, epilogue="swiglu_gate", gate=u,
+                                   backend=backend))
+    g = jnp.einsum("ecd,edf->ecf", x, wg)
+    want = np.asarray(jax.nn.silu(g) * jnp.einsum("ecd,edf->ecf", x, wu))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_out_dtype_selection_regression():
+    """ops.matmul must hand the TRUE out_dtype to the selector: the seed
+    inverted the conditional and priced every non-f32 output as f32
+    (mis-modeling bf16 epilogue write bytes)."""
+    from repro.core import clear_selection_cache
+    from repro.core import selector as selector_mod
+    clear_selection_cache()
+    a = jnp.asarray(RNG.standard_normal((256, 256)), dtype=jnp.bfloat16)
+    b = jnp.asarray(RNG.standard_normal((256, 256)), dtype=jnp.bfloat16)
+    matmul(a, b, out_dtype=jnp.bfloat16, backend="pallas_interpret")
+    out_dtypes = {s.problem.out_dtype for s in selector_mod._CACHE.values()}
+    assert out_dtypes == {"bfloat16"}
+    clear_selection_cache()
+    matmul(a, b, out_dtype=jnp.float32, backend="pallas_interpret")
+    out_dtypes = {s.problem.out_dtype for s in selector_mod._CACHE.values()}
+    assert out_dtypes == {"float32"}
 
 
 # ---------------------------------------------------------------------------

@@ -2,7 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # CPU container: shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     TPU_V4,
@@ -144,6 +148,110 @@ def test_selection_efficiency_vs_simulator_spot():
         eff = best_r.time / simulate_gemm(p, sel.config, TPU_V5E).time
         effs.append(eff)
     assert sum(effs) / len(effs) >= 0.85, effs
+
+
+def test_vectorized_scoring_matches_scalar_and_argmin():
+    """The numpy batch scorer must reproduce the scalar fast path exactly and
+    the vectorized argmin must return the identical config the sequential
+    scoring loop (seed behaviour) would pick."""
+    import numpy as np
+    from repro.core import Epilogue, argmin_candidate, score_candidates
+
+    shapes = [(4096, 4096, 4096), (100, 300, 77), (8, 8192, 8192),
+              (64, 128, 2048), (2048, 512, 1024), (1, 128, 128),
+              (640, 256, 256), (256, 256, 8192)]
+    eps = [Epilogue(), Epilogue(bias=True, activation="gelu"),
+           Epilogue(activation="swiglu_gate", residual=True)]
+    for (M, N, K) in shapes:
+        for ep in eps:
+            p = GemmProblem(M=M, N=N, K=K, epilogue=ep)
+            cands = candidate_tiles(p, TPU_V5E)
+            vec = score_candidates(p, cands, TPU_V5E)
+            scal = np.array([score_candidate(p, t, TPU_V5E) for t in cands])
+            assert np.allclose(vec, scal, rtol=1e-14)
+            # reference sequential argmin (the seed's scoring loop)
+            best, best_score = None, None
+            for t, s in zip(cands, scal):
+                if best_score is None or s < best_score - 1e-15 or (
+                        abs(s - best_score) <= 1e-15
+                        and (t.bm * t.bn * t.bk)
+                        > (best.bm * best.bn * best.bk)):
+                    best, best_score = t, s
+            assert argmin_candidate(p, cands, TPU_V5E) == best, (M, N, K, ep)
+
+
+def test_candidate_arrays_and_select_fast_parity():
+    """The vectorized enumeration must reproduce candidate_tiles exactly
+    (same filters, same order) and select_fast the sequential winner."""
+    import numpy as np
+    from repro.core import Epilogue, argmin_candidate, candidate_arrays
+    from repro.core.selector import select_fast
+
+    shapes = [(4096, 4096, 4096), (100, 300, 77), (8, 8192, 8192),
+              (64, 128, 2048), (1, 128, 128), (640, 256, 256),
+              (256, 256, 8192), (13, 77, 100)]
+    for (M, N, K) in shapes:
+        for ep in [Epilogue(), Epilogue(bias=True, activation="gelu")]:
+            p = GemmProblem(M=M, N=N, K=K, epilogue=ep)
+            tiles = candidate_tiles(p, TPU_V5E)
+            bm, bn, bk, sk, gm = candidate_arrays(p, TPU_V5E)
+            assert len(bm) == len(tiles)
+            for i, t in enumerate(tiles):
+                assert (t.bm, t.bn, t.bk, t.split_k, t.group_m) == \
+                    (int(bm[i]), int(bn[i]), int(bk[i]),
+                     int(sk[i]), int(gm[i]))
+            best, n = select_fast(p, TPU_V5E)
+            assert n == len(tiles)
+            assert best == argmin_candidate(p, tiles, TPU_V5E), (M, N, K, ep)
+
+
+def test_epilogue_traffic_terms():
+    """Fused epilogue operands add exactly their compulsory reads; the
+    unfused formulation costs one full-output round trip per post-op more."""
+    from repro.core import DTYPE_BYTES, Epilogue, epilogue_unfused_extra_bytes
+
+    p0 = GemmProblem(M=1024, N=2048, K=512)
+    ep = Epilogue(bias=True, activation="swiglu_gate", residual=True)
+    p1 = GemmProblem(M=1024, N=2048, K=512, epilogue=ep)
+    t = TileConfig(bm=256, bn=256, bk=256)
+    bi = DTYPE_BYTES[p0.in_dtype]
+    want_extra = (2 * 1024 * 2048 + 2048) * bi        # gate + residual + bias
+    assert hbm_traffic(p1, t) - hbm_traffic(p0, t) == want_extra
+    assert p1.min_bytes - p0.min_bytes == want_extra
+    # unfused: 3 post-ops, each a full f32 output read+write, plus operands
+    bo = DTYPE_BYTES[p0.out_dtype]
+    assert epilogue_unfused_extra_bytes(p1) == \
+        3 * 2 * 1024 * 2048 * bo + want_extra
+    # fused latency strictly below unfused accounting
+    lat = gemm_latency(p1, t, TPU_V5E)
+    unfused = gemm_latency(p0, t, TPU_V5E).total \
+        + epilogue_unfused_extra_bytes(p1) / TPU_V5E.hbm_bandwidth
+    assert lat.total < unfused
+
+
+def test_split_k_no_hbm_partials_in_model():
+    """In-kernel split-K: same HBM traffic as the flat-K schedule (no
+    (sk, M, N) partial write/read penalty), only K-padding can differ."""
+    p = GemmProblem(M=256, N=256, K=4096)
+    t1 = TileConfig(bm=256, bn=256, bk=256, split_k=1)
+    t4 = TileConfig(bm=256, bn=256, bk=256, split_k=4)
+    assert hbm_traffic(p, t4) == hbm_traffic(p, t1)
+    r1 = simulate_gemm(p, t1, TPU_V5E)
+    r4 = simulate_gemm(p, t4, TPU_V5E)
+    assert r4.hbm_bytes == r1.hbm_bytes
+
+
+def test_selection_epilogue_aware_and_cached_separately():
+    from repro.core import Epilogue
+    clear_selection_cache()
+    s0 = select_gemm_config(512, 512, 512)
+    n = selection_cache_size()
+    ep = Epilogue(activation="swiglu_gate", residual=True)
+    s1 = select_gemm_config(512, 512, 512, epilogue=ep)
+    assert selection_cache_size() == n + 1
+    assert s1.problem.epilogue == ep
+    assert s1.predicted.total >= s0.predicted.total   # extra operand reads
+    assert s1.predicted.hbm_traffic > s0.predicted.hbm_traffic
 
 
 def test_simulator_conservation():

@@ -3,7 +3,11 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # CPU container: shim
+    from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
