@@ -22,10 +22,10 @@ LLAMA3 = {
 TOKENS = (1024, 4096, 8192)
 
 
-def llama3_gemms(size: str) -> List[Tuple[str, int, int, int]]:
+def llama3_gemms(size: str, tokens=TOKENS) -> List[Tuple[str, int, int, int]]:
     d, kv, ff, v = LLAMA3[size]
     out = []
-    for t in TOKENS:
+    for t in tokens:
         out += [
             (f"{size}/qkv/t{t}", t, d + 2 * kv, d),
             (f"{size}/attn_out/t{t}", t, d, d),
@@ -36,12 +36,13 @@ def llama3_gemms(size: str) -> List[Tuple[str, int, int, int]]:
     return out
 
 
-def run(hw_name: str = "tpu_v5e", verbose: bool = True):
+def run(hw_name: str = "tpu_v5e", verbose: bool = True,
+        sizes=tuple(LLAMA3), tokens=TOKENS):
     hw = get_hardware(hw_name)
     rows = []
     effs = []
-    for size in LLAMA3:
-        for (name, M, N, K) in llama3_gemms(size):
+    for size in sizes:
+        for (name, M, N, K) in llama3_gemms(size, tokens):
             p = GemmProblem(M=M, N=N, K=K)
             sel = select_gemm_config(M, N, K, hw=hw)
             best_t, best_r = exhaustive_best(p, hw, candidate_tiles(p, hw))

@@ -16,22 +16,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep sizes (slow on 1 CPU core)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes only — the CI rot check: every "
+                         "registered benchmark must still run")
     args = ap.parse_args()
 
-    from benchmarks import (fused_epilogue, llama3_shapes, peak_vs_intensity,
-                            roofline_table, selection_efficiency,
-                            selection_overhead)
+    from benchmarks import (fused_epilogue, hierarchy_sweep, llama3_shapes,
+                            peak_vs_intensity, roofline_table,
+                            selection_efficiency, selection_overhead)
     from repro.core import clear_selection_cache, select_gemm_config
 
-    n_eff = 1000 if args.full else 120
-    n_ai = 500 if args.full else 120
+    n_eff = 1000 if args.full else (8 if args.smoke else 120)
+    n_ai = 500 if args.full else (8 if args.smoke else 120)
 
     print("name,us_per_call,derived")
     rows = []
 
     # Fig. 3 — selection efficiency (v5e) + Fig. 5 portability (v5p, v4).
     for hw in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
-        n = n_eff if hw == "tpu_v5e" else max(40, n_eff // 3)
+        n = n_eff if hw == "tpu_v5e" else (n_eff if args.smoke
+                                           else max(40, n_eff // 3))
         t0 = time.perf_counter()
         s = selection_efficiency.run(n=n, hw_name=hw, verbose=False)
         dt = (time.perf_counter() - t0) / max(n, 1) * 1e6
@@ -43,7 +47,8 @@ def main() -> None:
     # Table II — selection overhead vs emulated autotune.
     t0 = time.perf_counter()
     tab = selection_overhead.run(verbose=False,
-                                 autotune_upto=512 if not args.full else 1024)
+                                 autotune_upto=1024 if args.full
+                                 else (256 if args.smoke else 512))
     dt = (time.perf_counter() - t0) * 1e6
     cold = tab[2][2]     # 1024^3 cold selection in us
     auto = tab[1][4]     # 512^3 autotune seconds
@@ -65,6 +70,16 @@ def main() -> None:
           f"mean_byte_savings={byte_save:.1f}%_"
           f"mean_latency_savings={lat_save:.1f}%")
 
+    # §Hierarchy — multi-level topology ablation (llama3 shapes).
+    t0 = time.perf_counter()
+    hs = hierarchy_sweep.run(sizes=("8b",) if args.smoke else ("8b", "70b"),
+                             simulate=not args.smoke, verbose=False)
+    n_hs = sum(s["n"] for s in hs.values())
+    dt = (time.perf_counter() - t0) / max(n_hs, 1) * 1e6
+    flips = sum(s["flips"] for s in hs.values())
+    print(f"hierarchy_sweep,{dt:.1f},"
+          f"flips={flips}/{n_hs}_presets={len(hs)}")
+
     # Fig. 4 — percent of peak vs arithmetic intensity.
     t0 = time.perf_counter()
     r4 = peak_vs_intensity.run(n=n_ai, verbose=False)
@@ -74,7 +89,10 @@ def main() -> None:
 
     # Fig. 6 — Llama-3 key GEMMs.
     t0 = time.perf_counter()
-    r6 = llama3_shapes.run(verbose=False)
+    r6 = llama3_shapes.run(verbose=False,
+                           sizes=("8b",) if args.smoke else ("8b", "70b"),
+                           tokens=(1024,) if args.smoke else (1024, 4096,
+                                                              8192))
     dt = (time.perf_counter() - t0) / max(len(r6), 1) * 1e6
     eff = [float(x[6]) for x in r6]
     print(f"fig6_llama3_shapes,{dt:.1f},"

@@ -4,8 +4,9 @@
         --k 4096 [--dtype bfloat16] [--hw tpu_v5e] [--top 10]
 
 Shows the ranked candidate table (predicted latency, bottleneck, reuse),
-the simulator's cross-check, and how the choice changes across hardware
-presets (paper Fig. 5 portability).
+the simulator's cross-check, per-level byte splits on multi-level
+topologies (--hw gpu_mi300x_like / gpu_h100_like), and how the choice
+changes across hardware presets (paper Fig. 5 portability).
 """
 import argparse
 
@@ -39,11 +40,21 @@ def main():
               f"{p.flops/sim.time/1e12:9.1f} "
               f"{reuse_fraction(p, cfg):6.2f}  {pred.bottleneck}")
 
+    if hw.cache_levels:
+        best_cfg, best_pred = ranked[0]
+        sim = simulate_gemm(p, best_cfg, hw)
+        print(f"\nper-level bytes for {best_cfg} "
+              f"(model | simulator reuse distances):")
+        for name_, b in best_pred.level_bytes.items():
+            print(f"  {name_:6s} {b/1e6:12.1f} MB | "
+                  f"{sim.level_bytes.get(name_, 0.0)/1e6:12.1f} MB")
+
     print("\nportability (same model, constants swapped — paper Fig. 5):")
-    for name in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
+    for name in ("tpu_v5e", "tpu_v5p", "tpu_v4", "gpu_mi300x_like",
+                 "gpu_h100_like"):
         s = select_gemm_config(args.m, args.n, args.k, in_dtype=args.dtype,
                                hw=get_hardware(name))
-        print(f"  {name:8s} -> {str(s.config):20s} "
+        print(f"  {name:16s} -> {str(s.config):20s} "
               f"{s.predicted.total*1e6:9.1f} us  "
               f"{s.predicted_tflops:6.1f} TF/s  {s.predicted.bottleneck}")
 

@@ -1,11 +1,24 @@
 """tritonBLAS-on-TPU core: the paper's analytical model + selector."""
-from repro.core.hardware import (
+from repro.core.dtypes import (
+    ACC_BYTES,
     DTYPE_BYTES,
+    HLO_DTYPE_BYTES,
+    canonical_dtype,
+    dtype_bytes,
+)
+from repro.core.topology import (
+    HardwareSpec,
+    MemoryLevel,
+    Topology,
+    calibration_field_names,
+)
+from repro.core.hardware import (
+    GPU_H100_LIKE,
+    GPU_MI300X_LIKE,
     PRESETS,
     TPU_V4,
     TPU_V5E,
     TPU_V5P,
-    HardwareSpec,
     calibrate,
     get_hardware,
 )
@@ -17,14 +30,17 @@ from repro.core.latency import (
     TileConfig,
     chip_waves,
     epilogue_unfused_extra_bytes,
+    fits_placement,
     gemm_latency,
     grid_shape,
     hbm_traffic,
+    level_traffic,
     reuse_fraction,
     revisit_fractions,
     score_candidate,
     score_candidate_arrays,
     score_candidates,
+    staging_working_set,
     vmem_working_set,
 )
 from repro.core.roofline import (
@@ -39,24 +55,30 @@ from repro.core.selector import (
     candidate_arrays,
     candidate_tiles,
     clear_selection_cache,
+    load_selection_cache,
     rank_candidates,
+    save_selection_cache,
     select_gemm_config,
     selection_cache_size,
 )
 from repro.core.simulator import SimResult, exhaustive_best, simulate_gemm
 
 __all__ = [
-    "DTYPE_BYTES", "PRESETS", "TPU_V4", "TPU_V5E", "TPU_V5P",
-    "HardwareSpec", "calibrate", "get_hardware",
+    "ACC_BYTES", "DTYPE_BYTES", "HLO_DTYPE_BYTES", "canonical_dtype",
+    "dtype_bytes",
+    "HardwareSpec", "MemoryLevel", "Topology", "calibration_field_names",
+    "GPU_H100_LIKE", "GPU_MI300X_LIKE", "PRESETS",
+    "TPU_V4", "TPU_V5E", "TPU_V5P", "calibrate", "get_hardware",
     "EPILOGUE_NONE", "Epilogue", "GemmProblem", "LatencyBreakdown",
     "TileConfig", "chip_waves", "epilogue_unfused_extra_bytes",
-    "gemm_latency", "grid_shape", "hbm_traffic", "reuse_fraction",
-    "revisit_fractions", "score_candidate", "score_candidate_arrays",
-    "score_candidates", "vmem_working_set",
+    "fits_placement", "gemm_latency", "grid_shape", "hbm_traffic",
+    "level_traffic", "reuse_fraction", "revisit_fractions",
+    "score_candidate", "score_candidate_arrays", "score_candidates",
+    "staging_working_set", "vmem_working_set",
     "RooflineReport", "cost_analysis_terms", "parse_collective_bytes",
     "roofline",
     "Selection", "argmin_candidate", "candidate_arrays", "candidate_tiles",
-    "clear_selection_cache", "rank_candidates", "select_gemm_config",
-    "selection_cache_size",
+    "clear_selection_cache", "load_selection_cache", "rank_candidates",
+    "save_selection_cache", "select_gemm_config", "selection_cache_size",
     "SimResult", "exhaustive_best", "simulate_gemm",
 ]

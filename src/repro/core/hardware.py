@@ -1,106 +1,68 @@
-"""Hardware descriptions for the analytical model (paper §IV, Table I).
+"""Hardware presets for the analytical model (paper §IV, Table I).
 
 The paper parameterizes its model by "measurable hardware rates (bandwidths,
 instruction latencies, and matrix-core shapes)" so it can be retargeted by
-calibration alone (paper §V-E / Fig. 5).  We keep exactly that contract: a
-frozen dataclass of rates, plus presets for TPU v5e (primary target — the
-container's roofline constants), v5p and v4.  Retargeting = new preset.
+calibration alone (paper §V-E / Fig. 5).  We keep exactly that contract,
+now expressed through :mod:`repro.core.topology`: a :class:`Topology` is a
+frozen dataclass of compute rates plus an ordered :class:`MemoryLevel`
+chain.  Retargeting = new preset.
 
-TPU adaptation of Table I (see DESIGN.md §2):
+Preset families (DESIGN.md §2):
 
-    paper scope            TPU scope
-    ------------------     --------------------------------------------
-    matrix instruction     MXU systolic macro-atom (128x128x128)
-    register tile          VREG accumulator tile
-    shared-memory tile     Pallas BlockSpec block in VMEM
-    L2 / LLC cache tile    (none on v5e) -> deterministic HBM revisit model
-    device                 one TensorCore; chips multiply at the mesh level
+* **TPU** (v5e primary — the container's roofline constants; v5p, v4): the
+  1-level special case ``HBM → VMEM`` with no intermediate cache — cache
+  locality is the deterministic Pallas *revisit* model instead.
+* **GPU-shaped** (``gpu_mi300x_like``, ``gpu_h100_like``): multi-level
+  chains (``HBM → MALL → L2-per-XCD → LDS`` and ``HBM → L2 → SMEM``) that
+  exercise the paper's actual Table-I hierarchy.  Constants approximate the
+  public datasheets — these presets exist so the model's per-level terms
+  (``benchmarks/hierarchy_sweep.py``) have a real shape to bite on, hence
+  the ``_like`` suffix; on-silicon calibration would refine them.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import Callable, Dict, Mapping, Tuple
+from typing import Callable, Dict, Mapping
 
-DTYPE_BYTES: Dict[str, int] = {
-    "bfloat16": 2,
-    "float16": 2,
-    "float32": 4,
-    "float8_e4m3fn": 1,
-    "int8": 1,
-}
+from repro.core.dtypes import DTYPE_BYTES  # re-export (legacy import path)
+from repro.core.topology import (
+    HardwareSpec,
+    MemoryLevel,
+    Topology,
+    calibration_field_names,
+)
 
-
-@dataclass(frozen=True)
-class HardwareSpec:
-    """Calibratable hardware rates. All times in seconds, sizes in bytes."""
-
-    name: str
-    # MXU macro-atom (M, N, K): the instruction-level tile of the hierarchy.
-    mxu_shape: Tuple[int, int, int]
-    # Native sublane tiling (second-minor, minor) per dtype-bytes.
-    # f32 -> (8, 128), bf16 -> (16, 128), int8/fp8 -> (32, 128).
-    lane_width: int
-    sublane_f32: int
-    # Peak matmul throughput per chip, FLOP/s, keyed by input dtype.
-    peak_flops: Mapping[str, float]
-    # Memory system.
-    hbm_bandwidth: float          # B/s
-    hbm_bytes: int                # capacity per chip
-    hbm_latency: float            # Alg. 7's L_lat: first-byte latency
-    vmem_bytes: int               # capacity per core
-    vmem_bandwidth: float         # B/s, VMEM<->VREG
-    vmem_budget_fraction: float   # fraction of VMEM a kernel may claim
-    # Interconnect (per chip).
-    ici_bandwidth: float          # B/s per link
-    ici_links: int
-    # Fixed overheads (the paper's load/store "issue rate" axis).
-    dma_fixed: float              # per-grid-step DMA issue overhead
-    kernel_launch: float          # one-off kernel dispatch cost
-    pipeline_depth: int           # HBM->VMEM double(+)-buffering depth
-
-    # ---- derived helpers -------------------------------------------------
-    def flops(self, dtype: str) -> float:
-        return self.peak_flops.get(dtype, self.peak_flops["bfloat16"])
-
-    def vmem_budget(self) -> int:
-        return int(self.vmem_bytes * self.vmem_budget_fraction)
-
-    def sublane(self, dtype: str) -> int:
-        # Packing: second-minor native tile scales inversely with dtype width.
-        return self.sublane_f32 * (4 // min(DTYPE_BYTES[dtype], 4))
-
-    def ici_bandwidth_total(self) -> float:
-        return self.ici_bandwidth * self.ici_links
-
-    def with_calibration(self, **updates) -> "HardwareSpec":
-        """Paper §V-E: retarget by swapping measured constants only."""
-        return dataclasses.replace(self, **updates)
-
+__all__ = [
+    "DTYPE_BYTES", "HardwareSpec", "MemoryLevel", "Topology",
+    "TPU_V5E", "TPU_V5P", "TPU_V4", "GPU_MI300X_LIKE", "GPU_H100_LIKE",
+    "PRESETS", "get_hardware", "calibrate",
+]
 
 # ---------------------------------------------------------------------------
-# Presets.  v5e numbers match the roofline constants mandated for this repo:
-# 197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s/link ICI.  VMEM bandwidth is
-# modeled at ~22x HBM (scaling-book ratio).
+# TPU presets.  v5e numbers match the roofline constants mandated for this
+# repo: 197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s/link ICI.  VMEM
+# bandwidth is modeled at ~22x HBM (scaling-book ratio).
 # ---------------------------------------------------------------------------
 
-TPU_V5E = HardwareSpec(
+TPU_V5E = Topology(
     name="tpu_v5e",
     mxu_shape=(128, 128, 128),
     lane_width=128,
     sublane_f32=8,
     peak_flops={
         "bfloat16": 197e12,
+        "float16": 197e12,          # modeled at the bf16 rate
         "float32": 197e12 / 4,      # no native f32 matmul path
         "int8": 394e12,
         "float8_e4m3fn": 394e12,
     },
-    hbm_bandwidth=819e9,
-    hbm_bytes=16 * 1024**3,
-    hbm_latency=1.0e-6,
-    vmem_bytes=128 * 1024**2,
-    vmem_bandwidth=22 * 819e9,
-    vmem_budget_fraction=0.5,
+    levels=(
+        MemoryLevel(name="hbm", capacity=16 * 1024**3, bandwidth=819e9,
+                    latency=1.0e-6, scope="device"),
+        MemoryLevel(name="vmem", capacity=128 * 1024**2,
+                    bandwidth=22 * 819e9, scope="core",
+                    budget_fraction=0.5, holds_accumulator=True),
+    ),
     ici_bandwidth=50e9,
     ici_links=4,                    # 2D torus
     dma_fixed=1.0e-7,
@@ -112,6 +74,7 @@ TPU_V5P = TPU_V5E.with_calibration(
     name="tpu_v5p",
     peak_flops={
         "bfloat16": 459e12,
+        "float16": 459e12,
         "float32": 459e12 / 4,
         "int8": 918e12,
         "float8_e4m3fn": 918e12,
@@ -127,6 +90,7 @@ TPU_V4 = TPU_V5E.with_calibration(
     name="tpu_v4",
     peak_flops={
         "bfloat16": 275e12,
+        "float16": 275e12,
         "float32": 275e12 / 4,
         "int8": 275e12,
         "float8_e4m3fn": 275e12,
@@ -138,14 +102,93 @@ TPU_V4 = TPU_V5E.with_calibration(
     ici_links=6,
 )
 
-PRESETS: Dict[str, HardwareSpec] = {
+# ---------------------------------------------------------------------------
+# GPU-shaped multi-level presets.  Staging (LDS/SMEM) holds only the
+# double-buffered input blocks — accumulators live in registers, so
+# holds_accumulator=False widens the legal tile space exactly as on silicon.
+# Menus are finer than the TPU's: KB-scale staging wants smaller blocks, and
+# group_m spans 1..16 because grouped swizzle is priced (L2 residency of the
+# re-walked operand), not gated on the Pallas revisit trick.
+# ---------------------------------------------------------------------------
+
+GPU_MI300X_LIKE = Topology(
+    name="gpu_mi300x_like",
+    mxu_shape=(16, 16, 16),         # MFMA macro-atom
+    lane_width=32,
+    sublane_f32=8,
+    peak_flops={
+        "bfloat16": 1307e12,
+        "float16": 1307e12,
+        "float32": 163e12,
+        "int8": 2614e12,
+        "float8_e4m3fn": 2614e12,
+    },
+    levels=(
+        MemoryLevel(name="hbm", capacity=192 * 1024**3, bandwidth=5.3e12,
+                    latency=8.0e-7, scope="device"),
+        MemoryLevel(name="mall", capacity=256 * 1024**2, bandwidth=14.0e12,
+                    scope="device"),                     # Infinity Cache
+        MemoryLevel(name="l2", capacity=4 * 1024**2, bandwidth=25.0e12,
+                    scope="partition"),                  # 4 MiB per XCD
+        MemoryLevel(name="lds", capacity=64 * 1024, bandwidth=80.0e12,
+                    scope="core"),                       # 64 KiB per CU
+    ),
+    partitions=8,                   # XCDs
+    ici_bandwidth=64e9,             # xGMI per link
+    ici_links=7,
+    dma_fixed=1.0e-9,               # issue cost amortizes over parallel CUs
+    kernel_launch=3.0e-6,
+    pipeline_depth=2,
+    bm_menu=(16, 32, 64, 128, 256),
+    bn_menu=(32, 64, 128, 256),
+    bk_menu=(32, 64, 128),
+    split_k_menu=(1, 2, 4, 8),
+    group_m_menu=(1, 2, 4, 8, 16),
+)
+
+GPU_H100_LIKE = Topology(
+    name="gpu_h100_like",
+    mxu_shape=(64, 64, 16),         # wgmma macro-atom
+    lane_width=32,
+    sublane_f32=8,
+    peak_flops={
+        "bfloat16": 989e12,
+        "float16": 989e12,
+        "float32": 494e12,          # tf32 tensor-core path
+        "int8": 1979e12,
+        "float8_e4m3fn": 1979e12,
+    },
+    levels=(
+        MemoryLevel(name="hbm", capacity=80 * 1024**3, bandwidth=3.35e12,
+                    latency=7.0e-7, scope="device"),
+        MemoryLevel(name="l2", capacity=50 * 1024**2, bandwidth=12.0e12,
+                    scope="device"),
+        MemoryLevel(name="smem", capacity=228 * 1024, bandwidth=30.0e12,
+                    scope="core"),                       # 228 KiB per SM
+    ),
+    partitions=1,
+    ici_bandwidth=50e9,             # NVLink4 per link
+    ici_links=18,
+    dma_fixed=1.0e-9,               # issue cost amortizes over parallel SMs
+    kernel_launch=3.0e-6,
+    pipeline_depth=2,
+    bm_menu=(32, 64, 128, 256),
+    bn_menu=(32, 64, 128, 256),
+    bk_menu=(32, 64, 128),
+    split_k_menu=(1, 2, 4, 8),
+    group_m_menu=(1, 2, 4, 8, 16),
+)
+
+PRESETS: Dict[str, Topology] = {
     "tpu_v5e": TPU_V5E,
     "tpu_v5p": TPU_V5P,
     "tpu_v4": TPU_V4,
+    "gpu_mi300x_like": GPU_MI300X_LIKE,
+    "gpu_h100_like": GPU_H100_LIKE,
 }
 
 
-def get_hardware(name: str) -> HardwareSpec:
+def get_hardware(name: str) -> Topology:
     try:
         return PRESETS[name]
     except KeyError:
@@ -153,19 +196,24 @@ def get_hardware(name: str) -> HardwareSpec:
 
 
 def calibrate(
-    base: HardwareSpec,
+    base: Topology,
     microbenchmarks: Mapping[str, Callable[[], float]],
-) -> HardwareSpec:
+) -> Topology:
     """Lightweight calibration hook (paper contribution #2).
 
-    ``microbenchmarks`` maps HardwareSpec field names to zero-arg callables
+    ``microbenchmarks`` maps field names — real :class:`Topology` fields or
+    the legacy flat aliases (``hbm_bandwidth`` …) — to zero-arg callables
     that return a measured rate (e.g. a stream benchmark for hbm_bandwidth).
-    On real hardware these run once at install time; in this CPU container we
-    use the published constants and this remains the documented entry point.
+    Unknown names raise ``KeyError`` listing what is calibratable.  On real
+    hardware these run once at install time; in this CPU container we use
+    the published constants and this remains the documented entry point.
     """
+    known = calibration_field_names(base)
     measured = {}
     for field_name, bench in microbenchmarks.items():
-        if field_name not in {f.name for f in dataclasses.fields(base)}:
-            raise KeyError(f"not a HardwareSpec field: {field_name}")
+        if field_name not in known:
+            raise KeyError(
+                f"not a calibratable field: {field_name!r}; "
+                f"known: {sorted(known)}")
         measured[field_name] = bench()
     return base.with_calibration(**measured)

@@ -13,9 +13,15 @@ On TPU (see DESIGN.md §2) the same structure holds with these substitutions:
 * Alg. 4  (active CUs / wave quantization)           ->  partial-block padding
   waste within a core (ceil terms) + chip-level wave quantization used by the
   distributed layer (`chip_waves`).
-* Alg. 5  (cache hit rate)                           ->  deterministic Pallas
-  *revisit* model: the HBM->VMEM copy is skipped when a block index repeats
-  between consecutive grid steps; otherwise HBM traffic is exact.
+* Alg. 5  (cache hit rate)                           ->  two locality terms:
+  the deterministic Pallas *revisit* model (the fetch into staging memory is
+  skipped when a block index repeats between consecutive grid steps), plus a
+  generic reuse/footprint recurrence over the topology's cache levels
+  (``level_traffic``): a re-read whose reuse-window footprint fits in level
+  ℓ is served from ℓ, otherwise it spills to ℓ+1 — the paper's Alg. 5-7
+  cache-tile factorization.  On a 1-level chain (TPU: no cache between HBM
+  and VMEM) the recurrence is inert and the model reduces bit-for-bit to
+  the seed's HBM revisit model.
 * Alg. 7  (memory latency of a loop iteration)       ->  per-grid-step DMA
   bytes / HBM bandwidth, plus the fixed DMA-issue cost (the "load/store issue
   rate" axis) and first-byte latency at the prologue.
@@ -30,11 +36,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hardware import DTYPE_BYTES, HardwareSpec
+from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
+from repro.core.topology import HardwareSpec, MemoryLevel, Topology
 
 
 def cdiv(a: int, b: int) -> int:
@@ -170,13 +177,19 @@ class LatencyBreakdown:
 
     total: float                  # seconds
     compute: float                # steady-state MXU term per step (summed)
-    vmem: float                   # VMEM<->VREG port term (summed)
-    hbm: float                    # HBM DMA term (summed)
+    vmem: float                   # staging<->register port term (summed)
+    hbm: float                    # backing-memory DMA term (summed)
     issue: float                  # fixed DMA-issue term (summed)
     fill_drain: float             # prologue + epilogue + launch
-    hbm_traffic: float            # exact bytes moved HBM<->VMEM
+    hbm_traffic: float            # bytes served from backing memory
     padded_flops: float           # FLOPs incl. MXU-atom padding
-    bottleneck: str               # one of BOTTLENECKS
+    bottleneck: str               # one of BOTTLENECKS (+ per-level names)
+    # Per-level views (topology refactor): bytes served from each memory
+    # level of the chain (backing + caches) and the summed bandwidth term
+    # of each level's port.  On a 1-level chain these hold the HBM entry
+    # only and `hbm`/`hbm_traffic` above are their single values.
+    level_bytes: Mapping[str, float] = field(default_factory=dict)
+    level_seconds: Mapping[str, float] = field(default_factory=dict)
 
     @property
     def efficiency(self) -> float:
@@ -191,6 +204,8 @@ BOTTLENECKS = (
     "dma_issue",          # paper: load/store issue rate bound
     "pipeline_fill",      # paper: under-occupied compute bound
 )
+# Multi-level topologies additionally report "<level>_bandwidth" (e.g.
+# "l2_bandwidth") when an intermediate cache port dominates.
 
 
 def grid_shape(p: GemmProblem, t: TileConfig) -> Tuple[int, int, int]:
@@ -222,7 +237,7 @@ def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
 
     bi = DTYPE_BYTES[p.in_dtype]
     in_bytes = (t.bm * t.bk + t.bk * t.bn) * bi
-    acc_bytes = 2 * t.bm * t.bn * 4          # f32 accumulator read + write
+    acc_bytes = 2 * t.bm * t.bn * ACC_BYTES  # f32 accumulator read + write
     ep = p.epilogue
     _, _, Tk = grid_shape(p, t)
     e_bytes = (ep.n_mn_operands * t.bm * t.bn
@@ -286,6 +301,108 @@ def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
     return p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
 
+# ---------------------------------------------------------------------------
+# Alg. 5-7 generalization — per-level reuse/footprint recurrence.
+#
+# ``hbm_traffic`` above is the 1-level base: every fetch the revisit model
+# does not skip is billed to backing memory.  On a multi-level chain, each
+# *re-read* (a fetch of bytes touched before) has a deterministic reuse
+# window — the bytes streamed between consecutive uses under the kernel's
+# (m outer, n middle, k inner; m innermost within a group) iteration order.
+# A re-read whose window fits in cache level ℓ is served from ℓ; otherwise
+# it spills to the next-farther level, ultimately to backing memory.  This
+# is the paper's cache-tile factorization: it prices group_m as L2 residency
+# of the re-walked operand instead of a free menu entry.
+#
+# The recurrence is formulated as a SUBTRACTION from the all-HBM base so
+# that a chain with no cache levels reproduces the seed model bit-for-bit.
+# ---------------------------------------------------------------------------
+
+def _spill_classes(p: GemmProblem, t: TileConfig
+                   ) -> List[Tuple[float, float]]:
+    """Re-read classes not absorbed by the revisit skip, per batch element.
+
+    Returns ``(bytes, window_bytes)`` pairs.  Iteration order determines the
+    windows:
+
+    * ungrouped (g<=1): an A row-panel is re-read on each n-advance with a
+      one-tile window (A panel + one B panel); a B column-panel is re-read
+      on each m-advance with a full-row window (A panel + ALL B panels).
+    * grouped (g>1): A re-reads see a group-pass window (g A panels + one
+      B panel); B re-reads within a group see the one-tile window; B
+      re-reads across groups see a full group-sweep window.
+
+    Classes the Pallas revisit model already skips (Tk == 1 cases priced by
+    ``revisit_fractions``) are omitted — those fetches never leave staging.
+    """
+    Tm, Tn, Tk = grid_shape(p, t)
+    bi = DTYPE_BYTES[p.in_dtype]
+    g = min(t.group_m, Tm)
+    tile_window = (t.bm + t.bn) * p.K * bi
+    out: List[Tuple[float, float]] = []
+    if g <= 1:
+        if Tn > 1 and Tk != 1:
+            out.append(((Tn - 1) * p.M * p.K * bi, tile_window))
+        if Tm > 1:
+            out.append(((Tm - 1) * p.K * p.N * bi,
+                        (t.bm * p.K + p.K * p.N) * bi))
+    else:
+        if Tn > 1:
+            out.append(((Tn - 1) * p.M * p.K * bi,
+                        (g * t.bm + t.bn) * p.K * bi))
+        if Tk != 1:
+            out.append(((g - 1) / g * Tm * p.K * p.N * bi, tile_window))
+        if Tm > g:
+            out.append(((Tm / g - 1) * p.K * p.N * bi,
+                        (g * t.bm * p.K + p.K * p.N) * bi))
+    return out
+
+
+def _serving_cache(window: float, cache_levels: Sequence[MemoryLevel]
+                   ) -> Optional[MemoryLevel]:
+    """Nearest cache level whose budget covers the reuse window, else None
+    (the re-read spills all the way to backing memory)."""
+    for lvl in reversed(cache_levels):
+        if window <= lvl.budget():
+            return lvl
+    return None
+
+
+def level_traffic(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+                  ) -> Dict[str, float]:
+    """Bytes served from each memory level (backing + caches), whole GEMM.
+
+    Output writes and epilogue operand reads always go to backing memory
+    (write-through; compulsory).  On a 1-level chain the single entry equals
+    ``hbm_traffic`` exactly.
+    """
+    served = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
+    base = hbm_traffic(p, t)
+    served[hw.backing.name] = base
+    if hw.cache_levels:
+        for bytes_, window in _spill_classes(p, t):
+            lvl = _serving_cache(window, hw.cache_levels)
+            if lvl is not None:
+                b = bytes_ * p.batch
+                served[lvl.name] += b
+                served[hw.backing.name] -= b
+        served[hw.backing.name] = max(served[hw.backing.name], 0.0)
+    return served
+
+
+def level_step_seconds(hw: HardwareSpec, served: Mapping[str, float],
+                       steps: float) -> Dict[str, float]:
+    """Per-grid-step seconds on each level's port.  The hierarchy is
+    inclusive: bytes served at level ℓ also cross every port nearer than ℓ,
+    so a cache port carries its own hits plus all farther-level traffic."""
+    out: Dict[str, float] = {}
+    through = 0.0
+    for lvl in hw.levels[:-1]:
+        through += served.get(lvl.name, 0.0)
+        out[lvl.name] = through / lvl.bandwidth / steps
+    return out
+
+
 def epilogue_unfused_extra_bytes(p: GemmProblem) -> float:
     """Extra HBM bytes when the epilogue runs as separate XLA elementwise ops
     after the GEMM instead of inside the flush (DESIGN.md §3).
@@ -317,17 +434,19 @@ def reuse_fraction(p: GemmProblem, t: TileConfig) -> float:
 # ---------------------------------------------------------------------------
 
 def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
-                        ) -> Tuple[float, float]:
-    """Returns (hbm_seconds, issue_seconds) averaged over grid steps.
+                        ) -> Tuple[Dict[str, float], float, Dict[str, float]]:
+    """Returns (per-level step seconds, issue_seconds, per-level served
+    bytes) averaged over grid steps.
 
     Output writes are folded in amortized: each (m,n) tile writes bm*bn once
     per Tk steps. The fixed DMA-issue cost is the paper's load/store
-    issue-rate axis.
+    issue-rate axis.  Memory levels pipeline against each other, so the
+    effective memory-side step time is the max of the per-level entries.
     """
     Tm, Tn, Tk = grid_shape(p, t)
     steps = Tm * Tn * Tk * p.batch
-    hbm = hbm_traffic(p, t) / hw.hbm_bandwidth / steps
-    return hbm, hw.dma_fixed
+    served = level_traffic(p, t, hw)
+    return level_step_seconds(hw, served, steps), hw.dma_fixed, served
 
 
 # ---------------------------------------------------------------------------
@@ -340,10 +459,12 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     steps = Tm * Tn * Tk * p.batch
 
     mxu_s, vmem_s = step_compute_latency(p, t, hw)
-    hbm_s, issue_s = step_memory_latency(p, t, hw)
+    level_s, issue_s, served = step_memory_latency(p, t, hw)
+    hbm_s = level_s[hw.backing.name]
+    mem_s = max(level_s.values())
 
     compute_side = max(mxu_s, vmem_s)
-    memory_side = hbm_s + issue_s
+    memory_side = mem_s + issue_s
     l_iter = max(compute_side, memory_side)           # software pipeline
 
     # Prologue: first block fetch cannot be hidden (paper Alg. 8 L_prologue);
@@ -363,6 +484,7 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     # ^ padding waste: ceil to blocks (blocks then ceil to atoms; blocks are
     # atom-aligned by construction of the candidate space).
 
+    level_seconds = {name: steps * s for name, s in level_s.items()}
     terms = {
         "mxu_compute": steps * mxu_s,
         "vmem_bandwidth": steps * vmem_s,
@@ -370,6 +492,8 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
         "dma_issue": steps * issue_s,
         "pipeline_fill": fill_drain,
     }
+    for lvl in hw.cache_levels:
+        terms[f"{lvl.name}_bandwidth"] = level_seconds[lvl.name]
     bottleneck = max(terms, key=terms.get)
 
     return LatencyBreakdown(
@@ -379,9 +503,11 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
         hbm=terms["hbm_bandwidth"],
         issue=terms["dma_issue"],
         fill_drain=fill_drain,
-        hbm_traffic=hbm_traffic(p, t),
+        hbm_traffic=served[hw.backing.name],
         padded_flops=padded_flops,
         bottleneck=bottleneck,
+        level_bytes=served,
+        level_seconds=level_seconds,
     )
 
 
@@ -412,7 +538,7 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     ep = p.epilogue
     n_mn, has_bias = ep.n_mn_operands, int(ep.bias)
     e_vmem = (n_mn * bm * bn + has_bias * bn) * bi / Tk
-    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn
+    vmem_s = ((bm * bk + bk * bn) * bi + 2.0 * ACC_BYTES * bm * bn
               + e_vmem) / hw.vmem_bandwidth
 
     # revisit fractions (inlined)
@@ -429,11 +555,83 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
-    hbm_s = traffic / hw.hbm_bandwidth / steps
-    l_iter = max(max(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    if hw.cache_levels:
+        # reuse/footprint recurrence: cache-served re-reads leave HBM.
+        absorbed: Dict[str, float] = {}
+        hbm_bytes = traffic
+        for bytes_, window in _spill_classes(p, t):
+            lvl = _serving_cache(window, hw.cache_levels)
+            if lvl is not None:
+                served = bytes_ * p.batch
+                absorbed[lvl.name] = absorbed.get(lvl.name, 0.0) + served
+                hbm_bytes -= served
+        hbm_bytes = max(hbm_bytes, 0.0)
+        mem_s = hbm_bytes / hw.hbm_bandwidth / steps
+        through = hbm_bytes
+        for lvl in hw.cache_levels:
+            through += absorbed.get(lvl.name, 0.0)
+            mem_s = max(mem_s, through / lvl.bandwidth / steps)
+    else:
+        mem_s = traffic / hw.hbm_bandwidth / steps
+    l_iter = max(max(mxu_s, vmem_s), mem_s + hw.dma_fixed)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter
+
+
+def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
+                               traffic: np.ndarray, Tm: np.ndarray,
+                               Tn: np.ndarray, Tk: np.ndarray,
+                               bm: np.ndarray, bn: np.ndarray,
+                               gm: np.ndarray, steps: np.ndarray
+                               ) -> np.ndarray:
+    """Vectorized memory-side step seconds over candidate column arrays:
+    the per-level reuse/footprint recurrence (``_spill_classes`` +
+    ``_serving_cache``) in one numpy pass, shared by
+    ``score_candidate_arrays`` and ``selector.select_fast``.
+
+    ``traffic`` is the all-HBM base (revisit model applied).  Chains with no
+    cache level return the seed's exact expression — bit-for-bit parity on
+    1-level topologies."""
+    if not hw.cache_levels:
+        return traffic / hw.hbm_bandwidth / steps
+    bi = DTYPE_BYTES[p.in_dtype]
+    M, N, K = p.M, p.N, p.K
+    g = np.minimum(np.maximum(gm, 1), Tm).astype(np.float64)
+    gle1 = g <= 1          # clamped, matching _spill_classes' g = min(gm, Tm)
+    ggt1 = ~gle1
+    tk1 = Tk == 1
+    # Re-read classes: bytes (per batch element) + reuse-window footprints,
+    # mirroring _spill_classes.  Revisit-skipped classes zero out.
+    a_bytes = np.where(gle1 & tk1, 0.0, (Tn - 1) * float(M * K * bi))
+    a_win = np.where(ggt1, (g * bm + bn) * float(K * bi),
+                     (bm + bn) * float(K * bi))
+    b1_bytes = np.where(
+        gle1, (Tm - 1) * float(K * N * bi),
+        np.where(tk1, 0.0, (g - 1) / g * Tm * float(K * N * bi)))
+    b1_win = np.where(gle1, (bm * K + K * N) * float(bi),
+                      (bm + bn) * float(K * bi))
+    b2_bytes = np.where(ggt1,
+                        np.maximum(Tm / g - 1.0, 0.0) * float(K * N * bi),
+                        0.0)
+    b2_win = (g * bm * K + float(K * N)) * bi
+    caches = hw.cache_levels
+    absorbed: List = [0.0] * len(caches)
+    for bytes_, win in ((a_bytes, a_win), (b1_bytes, b1_win),
+                        (b2_bytes, b2_win)):
+        b = bytes_ * p.batch
+        assigned = np.zeros(np.shape(win), bool)
+        for li in range(len(caches) - 1, -1, -1):      # nearest cache first
+            fit = ~assigned & (win <= caches[li].budget())
+            absorbed[li] = absorbed[li] + np.where(fit, b, 0.0)
+            assigned |= fit
+    hbm_bytes = np.maximum(traffic - sum(absorbed), 0.0)
+    mem = hbm_bytes / hw.hbm_bandwidth
+    through = hbm_bytes
+    for li, lvl in enumerate(caches):
+        through = through + absorbed[li]
+        mem = np.maximum(mem, through / lvl.bandwidth)
+    return mem / steps
 
 
 def score_candidates(p: GemmProblem, tiles: Sequence[TileConfig],
@@ -473,7 +671,7 @@ def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
     ep = p.epilogue
     n_mn, has_bias = ep.n_mn_operands, int(ep.bias)
     e_vmem = (n_mn * bm * bn + has_bias * bn) * bi / Tk
-    vmem_s = ((bm * bk + bk * bn) * bi + 8.0 * bm * bn
+    vmem_s = ((bm * bk + bk * bn) * bi + 2.0 * ACC_BYTES * bm * bn
               + e_vmem) / hw.vmem_bandwidth
 
     # revisit fractions (vectorized): A skipped on n-advance (ungrouped),
@@ -489,8 +687,9 @@ def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
     e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
-    hbm_s = traffic / hw.hbm_bandwidth / steps
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
+                                       bm, bn, gm, steps)
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), mem_s + hw.dma_fixed)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter
@@ -511,10 +710,26 @@ def chip_waves(p: GemmProblem, t: TileConfig, n_chips: int
     return active, waves
 
 
-def vmem_working_set(t: TileConfig, in_dtype: str, hw: HardwareSpec) -> int:
-    """Bytes of VMEM a kernel instance claims: pipeline_depth-buffered input
-    blocks + one f32 accumulator block (the paper's LDS-capacity filter)."""
+def staging_working_set(t: TileConfig, in_dtype: str,
+                        hw: HardwareSpec) -> int:
+    """Bytes of staging memory (VMEM / LDS / SMEM) a kernel instance claims:
+    pipeline_depth-buffered input blocks, plus one f32 accumulator block on
+    topologies whose staging level hosts the accumulator (TPU VMEM scratch;
+    GPU accumulators live in registers instead)."""
     bi = DTYPE_BYTES[in_dtype]
     inputs = hw.pipeline_depth * (t.bm * t.bk + t.bk * t.bn) * bi
-    acc = t.bm * t.bn * 4
+    acc = t.bm * t.bn * ACC_BYTES if hw.staging.holds_accumulator else 0
     return inputs + acc
+
+
+# Legacy name (the paper's LDS-capacity filter; on TPU staging == VMEM).
+vmem_working_set = staging_working_set
+
+
+def fits_placement(t: TileConfig, in_dtype: str, hw: HardwareSpec) -> bool:
+    """The per-level capacity filter: the kernel's pinned working set must
+    fit the budget of every placement level of the chain (the staging level
+    plus any deeper core-scoped level).  Generalizes the seed's flat VMEM
+    filter."""
+    ws = staging_working_set(t, in_dtype, hw)
+    return all(ws <= lvl.budget() for lvl in hw.placement_levels())

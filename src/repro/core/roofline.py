@@ -11,20 +11,18 @@ model does not expose them.  Constants default to the mandated v5e numbers.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, asdict
+from dataclasses import asdict, dataclass, field
 from typing import Dict, Mapping, Optional, Tuple
 
+from repro.core.dtypes import HLO_DTYPE_BYTES
 from repro.core.hardware import TPU_V5E, HardwareSpec
 
 # HLO shapes look like  bf16[4096,512]{1,0:T(8,128)}  or tuples thereof.
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|"
-                       r"u32|u16|u8|pred)\[([0-9,]*)\]")
-_DTYPE_BYTES = {
-    "f64": 8, "s64": 8, "u64": 8,
-    "f32": 4, "s32": 4, "u32": 4,
-    "f16": 2, "bf16": 2, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+# The short-name byte table is the shared one in core.dtypes.
+_SHAPE_RE = re.compile(
+    r"(" + "|".join(sorted(HLO_DTYPE_BYTES, key=len, reverse=True))
+    + r")\[([0-9,]*)\]")
+_DTYPE_BYTES = HLO_DTYPE_BYTES
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
@@ -81,10 +79,16 @@ class RooflineReport:
     useful_flop_ratio: float      # MODEL_FLOPS / HLO_FLOPs
     roofline_s: float             # max of the three terms
     collectives: Mapping[str, float]
+    # Per-level memory rooflines (topology refactor): HLO bytes pushed
+    # through each memory level's port.  The outermost entry is the classic
+    # memory term; inner entries bound how much a cache-resident schedule
+    # could recover.  1-level chains report the HBM entry only.
+    level_seconds: Mapping[str, float] = field(default_factory=dict)
 
     def as_dict(self) -> Dict:
         d = asdict(self)
         d["collectives"] = dict(self.collectives)
+        d["level_seconds"] = dict(self.level_seconds)
         return d
 
 
@@ -129,6 +133,8 @@ def roofline(
         useful_flop_ratio=(model_flops_dev / hlo_flops) if hlo_flops else 0.0,
         roofline_s=max(terms.values()),
         collectives=dict(collectives),
+        level_seconds={lvl.name: hlo_bytes / lvl.bandwidth
+                       for lvl in hw.levels[:-1]},
     )
 
 

@@ -12,13 +12,20 @@ power-of-two sizes mirroring Triton's constraint noted in paper §V-C.
 """
 from __future__ import annotations
 
+import atexit
+import hashlib
 import itertools
+import json
+import os
+import tempfile
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
+from repro.core.hardware import TPU_V5E
+from repro.core.topology import HardwareSpec
 from repro.core.latency import (
     EPILOGUE_NONE,
     Epilogue,
@@ -26,22 +33,28 @@ from repro.core.latency import (
     LatencyBreakdown,
     TileConfig,
     cdiv,
+    fits_placement,
     gemm_latency,
     grid_shape,
+    memory_step_seconds_arrays,
     round_up,
     score_candidate,
     score_candidates,
-    vmem_working_set,
+    staging_working_set,
+)
+from repro.core.topology import (
+    DEFAULT_BK_MENU as _BK_MENU,
+    DEFAULT_BM_MENU as _BM_MENU,
+    DEFAULT_BN_MENU as _BN_MENU,
+    DEFAULT_GROUP_M_MENU as _GROUP_M_MENU,
+    DEFAULT_SPLIT_K_MENU as _SPLIT_K_MENU,
 )
 
-# Candidate block-dimension menus. bn/bk live on the 128-lane axis; bm may
-# drop to the sublane granularity for skinny-M problems (padding waste would
-# otherwise dominate — the paper's tile-quantization discussion, §V-C).
-_BM_MENU = (8, 16, 32, 64, 128, 256, 512, 1024)
-_BN_MENU = (128, 256, 512, 1024)
-_BK_MENU = (128, 256, 512, 1024, 2048)
-_SPLIT_K_MENU = (1, 2, 4, 8)
-_GROUP_M_MENU = (1, 8)
+# Candidate block-dimension menus are per-topology (Topology.*_menu; the
+# defaults above are the TPU-shaped space): bn/bk live on the lane axis; bm
+# may drop to the sublane granularity for skinny-M problems (padding waste
+# would otherwise dominate — the paper's tile-quantization discussion, §V-C).
+# GPU-shaped presets carry finer menus sized to KB-scale staging memory.
 
 
 @dataclass(frozen=True)
@@ -77,9 +90,13 @@ def candidate_tiles(
       1. alignment — bm multiple of the dtype sublane, bn/bk of the lane width;
       2. usefulness — a block dim at most one menu step beyond the padded
          problem dim (bigger is pure padding waste);
-      3. VMEM capacity — pipeline-buffered working set fits the budget;
-      4. model-equivalence pruning — group_m only changes behaviour when the
-         revisit model can trigger (Tk == 1); split_k only when the grid is
+      3. per-level capacity — the pipeline-buffered working set fits the
+         budget of every placement level of the topology's chain (the
+         paper's LDS filter; on TPU this is the seed's VMEM filter);
+      4. model-equivalence pruning — on 1-level chains group_m only changes
+         behaviour when the revisit model can trigger (Tk == 1); on
+         multi-level chains grouped swizzle is priced via L2 residency, so
+         it stays in the space for any Tk.  split_k only when the grid is
          small enough for fill/drain to matter (deterministic, part of the
          model, keeps P near the paper's 50-150).
 
@@ -91,7 +108,7 @@ def candidate_tiles(
     """
     sub = hw.sublane(p.in_dtype)
     lane = hw.lane_width
-    budget = hw.vmem_budget()
+    priced_grouping = bool(hw.cache_levels)
 
     def useful(menu: Sequence[int], extent: int, align: int) -> List[int]:
         padded = round_up(extent, align)
@@ -100,11 +117,11 @@ def candidate_tiles(
         cut = next((m for m in keep if m >= padded), keep[-1])
         return [m for m in keep if m <= cut]
 
-    bms = useful(_BM_MENU, p.M, sub)
-    bns = useful(_BN_MENU, p.N, lane)
-    bks = useful(_BK_MENU, p.K, lane)
-    sks = _SPLIT_K_MENU if allow_split_k else (1,)
-    gms = _GROUP_M_MENU if allow_grouping else (1,)
+    bms = useful(hw.bm_menu, p.M, sub)
+    bns = useful(hw.bn_menu, p.N, lane)
+    bks = useful(hw.bk_menu, p.K, lane)
+    sks = hw.split_k_menu if allow_split_k else (1,)
+    gms = hw.group_m_menu if allow_grouping else (1,)
 
     out: List[TileConfig] = []
     for bm, bn, bk in itertools.product(bms, bns, bks):
@@ -114,10 +131,12 @@ def candidate_tiles(
             if sk > 1 and (cdiv(p.K, sk) < bk or base_tiles >= 16):
                 continue                  # split finer than a block / no need
             for gm in gms:
-                if gm > 1 and (tk != 1 or cdiv(p.M, bm) < 2):
+                if gm > 1 and cdiv(p.M, bm) < 2:
+                    continue              # nothing to group
+                if gm > 1 and tk != 1 and not priced_grouping:
                     continue              # revisit can't trigger -> identical
                 t = TileConfig(bm=bm, bn=bn, bk=bk, split_k=sk, group_m=gm)
-                if vmem_working_set(t, p.in_dtype, hw) > budget:
+                if not fits_placement(t, p.in_dtype, hw):
                     continue
                 out.append(t)
     return out
@@ -126,24 +145,38 @@ def candidate_tiles(
 _GRID_CACHE: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
 
 
+def _grid_identity(hw: HardwareSpec) -> Tuple:
+    """The Topology fields the cached menu grid bakes in.  Keying on these
+    (not just hw.name) keeps same-named ``with_calibration`` retargets from
+    reusing a stale candidate filter; MemoryLevel is frozen so the levels
+    tuple hashes."""
+    return (hw.name, hw.levels, hw.bm_menu, hw.bn_menu, hw.bk_menu,
+            hw.split_k_menu, hw.group_m_menu, hw.pipeline_depth,
+            hw.lane_width, hw.sublane_f32)
+
+
 def _menu_grid(hw: HardwareSpec, in_dtype: str) -> Tuple[np.ndarray, ...]:
     """Static part of the candidate space for (hardware, dtype): the full
     lexicographic (bm, bn, bk, sk, gm) menu grid plus the problem-independent
-    alignment + VMEM-capacity keep-mask.  Cached — cold selection only pays
-    for the problem-dependent masks and the scoring pass."""
-    key = (hw.name, in_dtype)
+    alignment + per-level-capacity keep-mask.  Cached — cold selection only
+    pays for the problem-dependent masks and the scoring pass."""
+    key = (_grid_identity(hw), in_dtype)
     hit = _GRID_CACHE.get(key)
     if hit is not None:
         return hit
     bm, bn, bk, sk, gm = (g.ravel() for g in np.meshgrid(
-        np.asarray(_BM_MENU, np.int64), np.asarray(_BN_MENU, np.int64),
-        np.asarray(_BK_MENU, np.int64), np.asarray(_SPLIT_K_MENU, np.int64),
-        np.asarray(_GROUP_M_MENU, np.int64), indexing="ij"))
+        np.asarray(hw.bm_menu, np.int64), np.asarray(hw.bn_menu, np.int64),
+        np.asarray(hw.bk_menu, np.int64),
+        np.asarray(hw.split_k_menu, np.int64),
+        np.asarray(hw.group_m_menu, np.int64), indexing="ij"))
     sub, lane = hw.sublane(in_dtype), hw.lane_width
     bi = DTYPE_BYTES[in_dtype]
     static_keep = (bm % sub == 0) & (bn % lane == 0) & (bk % lane == 0)
-    working_set = hw.pipeline_depth * (bm * bk + bk * bn) * bi + bm * bn * 4
-    static_keep &= working_set <= hw.vmem_budget()
+    # Per-level capacity filter (vectorized fits_placement).
+    acc = bm * bn * ACC_BYTES if hw.staging.holds_accumulator else 0
+    working_set = hw.pipeline_depth * (bm * bk + bk * bn) * bi + acc
+    for lvl in hw.placement_levels():
+        static_keep &= working_set <= lvl.budget()
     # All menu entries are powers of two: ceil-divs become shifts, and the
     # split-K / grouping gate masks are grid-static (int64 floordiv is the
     # single most expensive numpy op on the cold path).
@@ -173,9 +206,9 @@ def _keep_mask(p: GemmProblem, hw: HardwareSpec, allow_split_k: bool,
     lane = hw.lane_width
 
     keep = static_keep \
-        & (bm <= _menu_cut(_BM_MENU, p.M, sub)) \
-        & (bn <= _menu_cut(_BN_MENU, p.N, lane)) \
-        & (bk <= _menu_cut(_BK_MENU, p.K, lane))
+        & (bm <= _menu_cut(hw.bm_menu, p.M, sub)) \
+        & (bn <= _menu_cut(hw.bn_menu, p.N, lane)) \
+        & (bk <= _menu_cut(hw.bk_menu, p.K, lane))
     if not allow_split_k:
         keep = keep & ~sk_gt1
     if not allow_grouping:
@@ -185,7 +218,12 @@ def _keep_mask(p: GemmProblem, hw: HardwareSpec, allow_split_k: bool,
     Tn = (p.N - 1 + bn) >> bn_sh
     keep = keep & ~(sk_gt1 & ((((p.K - 1 + sk) >> sk_sh) < bk)
                               | (Tm * Tn * p.batch >= 16)))
-    keep = keep & ~(gm_gt1 & ((((p.K - 1 + bk) >> bk_sh) != 1) | (Tm < 2)))
+    if hw.cache_levels:
+        # grouped swizzle is priced (L2 residency) -> keep for any Tk
+        keep = keep & ~(gm_gt1 & (Tm < 2))
+    else:
+        keep = keep & ~(gm_gt1 & ((((p.K - 1 + bk) >> bk_sh) != 1)
+                                  | (Tm < 2)))
     return keep
 
 
@@ -214,7 +252,8 @@ def _static_score_terms(hw: HardwareSpec, in_dtype: str,
     shape: MXU step seconds, the VMEM-port step seconds base, bm*bn, and the
     launch+prologue+epilogue fill/drain seconds.  Cached per (hardware,
     dtypes) — the cold path computes only shape-dependent terms."""
-    key = (hw.name, in_dtype, out_dtype)
+    key = (_grid_identity(hw), in_dtype, out_dtype,
+           hw.mxu_shape, hw.flops(in_dtype), hw.kernel_launch)
     hit = _STATIC_TERMS.get(key)
     if hit is not None:
         return hit
@@ -225,7 +264,7 @@ def _static_score_terms(hw: HardwareSpec, in_dtype: str,
     mxu_s = n_atoms * (2.0 * mm * mn * mk) / hw.flops(in_dtype)
     ab_bi = (bm * bk + bk * bn) * bi
     bmn = bm * bn
-    vmem_base_s = (ab_bi + 8.0 * bmn) / hw.vmem_bandwidth
+    vmem_base_s = (ab_bi + 2.0 * ACC_BYTES * bmn) / hw.vmem_bandwidth
     fill_drain = (hw.kernel_launch + 2 * hw.hbm_latency
                   + ab_bi / hw.hbm_bandwidth + bmn * bo / hw.hbm_bandwidth)
     vols = bmn * bk
@@ -284,8 +323,9 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
     b_bytes = Tm * float(p.K * p.N * bi) * (1.0 - b_skip)
     traffic = p.batch * (a_bytes + b_bytes + ce_bytes)
 
-    hbm_s = traffic / hw.hbm_bandwidth / steps
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), hbm_s + hw.dma_fixed)
+    mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
+                                       bm, bn, gm, steps)
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), mem_s + hw.dma_fixed)
     scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
     idx = np.flatnonzero(scores <= scores.min() + 1e-15)
     i = int(idx[np.argmax(vols[idx])])
@@ -310,6 +350,124 @@ def rank_candidates(
 
 
 _CACHE: Dict[Tuple, Selection] = {}
+
+# ---------------------------------------------------------------------------
+# Persistent on-disk selection table.  When REPRO_SELECTION_CACHE names a
+# JSON file (or load_selection_cache is called with a path), selections
+# survive process boundaries: a warm-started server pays zero cold-path
+# scoring for every shape any previous process already selected.  Entries
+# store only the winning config — rehydration reprices it with the O(1)
+# closed-form model, so a stale file can never smuggle in a stale latency.
+# ---------------------------------------------------------------------------
+
+_DISK_ENV = "REPRO_SELECTION_CACHE"
+_disk_table: Optional[Dict[str, Dict]] = None
+_disk_path: Optional[str] = None
+
+
+def _key_str(key: Tuple) -> str:
+    """Deterministic JSON key for a selection cache key (repr is stable:
+    ints, strs, bools and the frozen Epilogue dataclass)."""
+    return repr(key)
+
+
+def _topo_fingerprint(hw: HardwareSpec) -> str:
+    """Content fingerprint of everything the selection depends on — levels
+    (capacities AND rates), compute rates, menus, overheads.  Persisted
+    with each disk entry so a recalibrated same-name topology invalidates
+    the old selections instead of warm-starting from them."""
+    ident = (hw.levels, hw.mxu_shape, tuple(sorted(hw.peak_flops.items())),
+             hw.bm_menu, hw.bn_menu, hw.bk_menu, hw.split_k_menu,
+             hw.group_m_menu, hw.dma_fixed, hw.kernel_launch,
+             hw.pipeline_depth, hw.lane_width, hw.sublane_f32)
+    return hashlib.md5(repr(ident).encode()).hexdigest()[:16]
+
+
+def load_selection_cache(path: Optional[str] = None) -> int:
+    """Load (or re-load) the persistent selection table.  ``path`` defaults
+    to ``$REPRO_SELECTION_CACHE``; with neither set this is a no-op.
+    Returns the number of entries available for warm-starting."""
+    global _disk_table, _disk_path
+    path = path or os.environ.get(_DISK_ENV)
+    if not path:
+        _disk_table, _disk_path = None, None
+        return 0
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        table = {}
+    _disk_table, _disk_path = table, path
+    return len(table)
+
+
+def save_selection_cache(path: Optional[str] = None) -> Optional[str]:
+    """Atomically write the in-memory disk table, merged over whatever is
+    on disk (so concurrent processes sharing the path accumulate entries
+    instead of clobbering each other; ours win on key collisions —
+    selections are deterministic, so collisions agree anyway).  Returns the
+    path written (None when persistence is inactive)."""
+    global _disk_table
+    path = path or _disk_path or os.environ.get(_DISK_ENV)
+    if not path or _disk_table is None:
+        return None
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        merged = {}
+    merged.update(_disk_table)
+    _disk_table = merged
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def _disk_lookup(key: Tuple) -> Optional[Dict]:
+    global _disk_table
+    if _disk_table is None:
+        if not os.environ.get(_DISK_ENV):
+            return None
+        load_selection_cache()
+    if _disk_table is None:
+        return None
+    return _disk_table.get(_key_str(key))
+
+
+_FLUSH_EVERY = 32
+_atexit_registered = False
+
+
+def _disk_record(key: Tuple, sel: Selection, hw: HardwareSpec) -> None:
+    """Record a fresh selection.  Flushes eagerly while the table is small
+    (a restarted server becomes durable immediately) and every
+    ``_FLUSH_EVERY`` entries thereafter — a cold sweep of N shapes pays
+    O(N/32) file rewrites, not O(N); an atexit flush catches the tail."""
+    global _atexit_registered
+    if _disk_table is None:
+        return
+    c = sel.config
+    _disk_table[_key_str(key)] = {
+        "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
+                   "split_k": c.split_k, "group_m": c.group_m},
+        "n_candidates": sel.n_candidates,
+        "topo": _topo_fingerprint(hw),
+    }
+    if not _atexit_registered:
+        atexit.register(save_selection_cache)
+        _atexit_registered = True
+    n = len(_disk_table)
+    if n <= _FLUSH_EVERY or n % _FLUSH_EVERY == 0:
+        save_selection_cache()
 
 
 def _argmin_index(scores: np.ndarray, bm: np.ndarray, bn: np.ndarray,
@@ -360,6 +518,27 @@ def select_gemm_config(
 
     p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
                     out_dtype=out_dtype, batch=batch, epilogue=ep)
+    entry = _disk_lookup(key)
+    if entry is not None:
+        # Warm start: the winning config persisted from a previous process;
+        # reprice it O(1) — no enumeration, no scoring pass.  A malformed
+        # entry, one recorded under different topology constants (the key
+        # carries hw.name, the entry a content fingerprint — recalibration
+        # changes the argmin), or one that no longer fits the placement
+        # levels falls through to cold scoring.
+        try:
+            best = TileConfig(**entry["config"])
+            n_cands = int(entry["n_candidates"])
+            legal = (entry.get("topo") == _topo_fingerprint(hw)
+                     and fits_placement(best, p.in_dtype, hw))
+        except (KeyError, TypeError, ValueError):
+            legal = False
+        if legal:
+            sel = Selection(problem=p, config=best,
+                            predicted=gemm_latency(p, best, hw),
+                            hardware=hw.name, n_candidates=n_cands)
+            _CACHE[key] = sel
+            return sel
     # Fast O(P) scoring pass (Table II claim): enumeration, filtering and
     # scoring are all one numpy batch — only the winning TileConfig is ever
     # materialized; full latency breakdown for the winner only.
@@ -368,6 +547,7 @@ def select_gemm_config(
     sel = Selection(problem=p, config=best, predicted=gemm_latency(p, best, hw),
                     hardware=hw.name, n_candidates=n_cands)
     _CACHE[key] = sel
+    _disk_record(key, sel, hw)
     return sel
 
 

@@ -17,9 +17,14 @@ the machine at a strictly finer granularity than the closed-form model in
   carries across all of a tile's k-shards, so there is no HBM partial buffer
   and no combine pass — only the per-shard K padding,
 * fused epilogue operands (bias / gate / residual) fetched once per output
-  tile at the flush.
+  tile at the flush,
+* per-level byte counters on multi-level topologies: each re-fetched
+  operand panel's *measured* reuse distance (bytes streamed since its last
+  use, an LRU stack-distance proxy) decides which cache level serves it —
+  event-by-event, not the latency model's closed-form windows — and the
+  fetch is timed at that level's bandwidth.
 
-It shares nothing with ``latency.py`` but the HardwareSpec constants.
+It shares nothing with ``latency.py`` but the Topology constants.
 
 Per-tile O(1) fast path: within one output tile's k-loop, fetch and compute
 times are constant (edges depend on (m, n) only; no revisit while k varies),
@@ -30,11 +35,12 @@ benchmarks tractable on CPU.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterator, List, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Mapping, Tuple
 
-from repro.core.hardware import DTYPE_BYTES, HardwareSpec
+from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.latency import GemmProblem, TileConfig, cdiv
+from repro.core.topology import HardwareSpec, MemoryLevel
 
 _EXPLICIT = 3  # pipeline steps simulated exactly at each tile start
 
@@ -42,9 +48,12 @@ _EXPLICIT = 3  # pipeline steps simulated exactly at each tile start
 @dataclass(frozen=True)
 class SimResult:
     time: float          # seconds, end-to-end kernel latency
-    hbm_bytes: float     # exact bytes moved over HBM
+    hbm_bytes: float     # bytes moved, all levels + writebacks (legacy view)
     mxu_busy: float      # seconds the MXU was computing
     steps: int
+    # Bytes served from each memory level (backing + caches).  On a 1-level
+    # chain the single entry equals hbm_bytes.
+    level_bytes: Mapping[str, float] = field(default_factory=dict)
 
     @property
     def tflops(self) -> float:          # filled by caller via problem
@@ -81,9 +90,29 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
     # chews the full (bm, bn, bk) block; VMEM port moves block + accumulator.
     atoms = cdiv(t.bm, mm) * cdiv(t.bn, mn) * cdiv(t.bk, mk)
     ct_mxu = atoms * (2.0 * mm * mn * mk) / hw.flops(p.in_dtype)
-    ct_vmem = ((t.bm * t.bk + t.bk * t.bn) * bi + 2 * t.bm * t.bn * 4) \
-        / hw.vmem_bandwidth
+    ct_vmem = ((t.bm * t.bk + t.bk * t.bn) * bi
+               + 2 * t.bm * t.bn * ACC_BYTES) / hw.vmem_bandwidth
     ct = max(ct_mxu, ct_vmem)
+
+    # Multi-level state: measured reuse distances decide the serving level.
+    # ``clock`` counts bytes streamed into staging (an LRU stack-distance
+    # proxy); a panel re-fetched after fewer bytes than a cache level's
+    # budget is served from that level at its bandwidth.
+    caches = hw.cache_levels
+    backing = hw.backing
+    level_bytes = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
+    clock = 0.0
+    last_a = {}                                # (batch, i, s) -> clock
+    last_b = {}                                # (batch, j, s) -> clock
+
+    def panel_level(last, key):
+        prev = last.get(key)
+        if prev is not None:
+            dist = clock - prev
+            for lvl in reversed(caches):
+                if dist <= lvl.budget():
+                    return lvl
+        return backing
 
     # Pipeline state.
     depth = hw.pipeline_depth
@@ -94,13 +123,13 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
     mxu_busy = 0.0
     n_steps = 0
 
-    def run_step(fetch_bytes: float) -> None:
-        nonlocal dma_cursor, comp_cursor, total_bytes, mxu_busy, n_steps
+    def run_step(fetch_bytes: float, fetch_seconds: float) -> None:
+        nonlocal dma_cursor, comp_cursor, total_bytes, mxu_busy, n_steps, clock
         # DMA may start once its target buffer was drained `depth` steps ago.
         gate = comp_hist[-depth] if len(comp_hist) >= depth else 0.0
         if fetch_bytes > 0:
             dma_start = max(dma_cursor, gate)
-            dma_cursor = dma_start + fetch_bytes / bw + hw.dma_fixed
+            dma_cursor = dma_start + fetch_seconds + hw.dma_fixed
             ready = dma_cursor
         else:
             ready = gate                              # fully revisited step
@@ -109,17 +138,20 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
         if len(comp_hist) > depth + 1:
             del comp_hist[0]
         total_bytes += fetch_bytes
+        clock += fetch_bytes
         mxu_busy += ct
         n_steps += 1
 
     def write_back(bytes_: float) -> None:
-        nonlocal dma_cursor, total_bytes
+        nonlocal dma_cursor, total_bytes, clock
         start = max(dma_cursor, comp_cursor)
         dma_cursor = start + bytes_ / bw + hw.dma_fixed
         total_bytes += bytes_
+        clock += bytes_                               # writes evict too
+        level_bytes[backing.name] += bytes_
 
     ep = p.epilogue
-    for _ in range(p.batch):
+    for e in range(p.batch):
         prev_a = prev_b = None
         for (i, j) in _tile_order(Tm, Tn, t.group_m):
             em = min(t.bm, p.M - i * t.bm)            # real edge extents
@@ -127,31 +159,45 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
             # k-shards run back-to-back inside the tile (grid (tiles, sk, Tk),
             # s middle, k inner); the accumulator carries across all of them.
             for s in range(t.split_k):
+                if caches:
+                    lvl_a = panel_level(last_a, (e, i, s))
+                    lvl_b = panel_level(last_b, (e, j, s))
+                    bw_a, bw_b = lvl_a.bandwidth, lvl_b.bandwidth
+                else:
+                    lvl_a = lvl_b = backing
+                    bw_a = bw_b = bw
                 k_lo = s * k_extent
                 k_hi = min(p.K, (s + 1) * k_extent)
                 # Per-step fetch bytes within this shard (constant over k).
                 steps_here = Tk
-                first_fetches: List[float] = []
+                first_fetches: List[Tuple[float, float]] = []
                 for kk in range(min(steps_here, _EXPLICIT)):
                     ek = max(0, min(t.bk, (k_hi - k_lo) - kk * t.bk))
                     a_idx, b_idx = (i, s, kk), (s, kk, j)
                     fa = 0.0 if a_idx == prev_a else em * ek * bi
                     fb = 0.0 if b_idx == prev_b else ek * en * bi
                     prev_a, prev_b = a_idx, b_idx
-                    first_fetches.append(fa + fb)
-                for f in first_fetches:
-                    run_step(f)
+                    first_fetches.append((fa, fb))
+                for fa, fb in first_fetches:
+                    level_bytes[lvl_a.name] += fa
+                    level_bytes[lvl_b.name] += fb
+                    secs = ((fa + fb) / bw if not caches
+                            else fa / bw_a + fb / bw_b)
+                    run_step(fa + fb, secs)
                 rest = steps_here - len(first_fetches)
                 if rest > 0:
                     # Settled linear regime: constant fetch (interior k) and
                     # constant compute -> both cursors advance by the slope.
+                    fa = em * t.bk * bi
+                    fb = t.bk * en * bi
                     f = (em * t.bk + t.bk * en) * bi
+                    sf = f / bw if not caches else fa / bw_a + fb / bw_b
                     # last k block may be ragged; simulate it explicitly
                     ragged = (k_hi - k_lo) % t.bk
                     bulk = rest - (1 if ragged else 0)
                     if bulk > 0:
-                        slope = max(f / bw + hw.dma_fixed, ct)
-                        dma_cursor += bulk * (f / bw + hw.dma_fixed)
+                        slope = max(sf + hw.dma_fixed, ct)
+                        dma_cursor += bulk * (sf + hw.dma_fixed)
                         comp_cursor = max(comp_cursor + bulk * ct,
                                           dma_cursor + ct)
                         comp_cursor = max(comp_cursor,
@@ -161,6 +207,9 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
                         if len(comp_hist) > depth + 1:
                             del comp_hist[0]
                         total_bytes += bulk * f
+                        clock += bulk * f
+                        level_bytes[lvl_a.name] += bulk * fa
+                        level_bytes[lvl_b.name] += bulk * fb
                         mxu_busy += bulk * ct
                         n_steps += bulk
                         prev_a = (i, s, steps_here - (2 if ragged else 1))
@@ -172,7 +221,14 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
                         fa = em * ek * bi
                         fb = ek * en * bi
                         prev_a, prev_b = a_idx, b_idx
-                        run_step(fa + fb)
+                        level_bytes[lvl_a.name] += fa
+                        level_bytes[lvl_b.name] += fb
+                        secs = ((fa + fb) / bw if not caches
+                                else fa / bw_a + fb / bw_b)
+                        run_step(fa + fb, secs)
+                if caches:
+                    last_a[(e, i, s)] = clock
+                    last_b[(e, j, s)] = clock
             # Epilogue operand fetch + single accumulator flush per tile
             # (split-K included: no HBM partials, no combine pass).
             e_fetch = (ep.n_mn_operands * em * en
@@ -181,7 +237,8 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
 
     end = max(comp_cursor, dma_cursor)
     return SimResult(time=end, hbm_bytes=total_bytes,
-                     mxu_busy=mxu_busy, steps=n_steps)
+                     mxu_busy=mxu_busy, steps=n_steps,
+                     level_bytes=level_bytes)
 
 
 def exhaustive_best(p: GemmProblem, hw: HardwareSpec,

@@ -1,0 +1,273 @@
+"""Memory-hierarchy topology model (paper §IV, Table I, generalized).
+
+The paper's claim is that GEMM configs can be picked analytically by
+"explicitly modeling the relationship between architectural topology, matrix
+shapes, and algorithmic blocking behavior".  The seed encoded that topology
+as a *flat* two-level dataclass (HBM + VMEM) which could not express the
+LDS + L2 + HBM hierarchies of the paper's actual GPU targets.  This module
+is the generalization:
+
+* :class:`MemoryLevel` — one level of the chain: capacity, bandwidth across
+  its port, first-access latency, and *scope* (device / partition / core).
+* :class:`Topology` — compute rates (MXU shape, peak FLOP/s, lane tiling),
+  partition count, fixed overheads, and an ordered ``levels`` chain running
+  **outermost → innermost**: ``levels[0]`` is backing memory (HBM),
+  ``levels[-1]`` is the kernel's staging memory (VMEM / LDS / SMEM), and
+  anything between is a cache (L2 / LLC / MALL) the latency model prices
+  via its reuse/footprint recurrence (``core/latency.py::level_traffic``).
+
+The TPU presets are the 1-level special case (no intermediate cache level:
+``levels == (hbm, vmem)``) and reproduce the seed/PR-1 model bit-for-bit —
+pinned by ``tests/test_topology.py``.  ``HardwareSpec`` remains as an alias
+so every existing call site keeps working; the legacy flat field names
+(``hbm_bandwidth``, ``vmem_bytes``, …) are derived properties of the chain
+ends, and ``with_calibration`` still accepts them (paper §V-E: retarget by
+swapping measured constants only).
+
+Candidate menus are per-topology: GPU-shaped presets need smaller staging
+tiles (LDS/SMEM is KB-scale where VMEM is MB-scale) and a finer ``group_m``
+menu, since grouped swizzle is a *priced* L2-residency decision there, not
+a free entry.  All menu entries must stay powers of two — the vectorized
+selector turns every ceil-division into a shift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Tuple
+
+from repro.core.dtypes import DTYPE_BYTES
+
+SCOPES = ("device", "partition", "core")
+
+# Default candidate menus (the TPU-shaped space of the seed; DESIGN.md §2).
+DEFAULT_BM_MENU = (8, 16, 32, 64, 128, 256, 512, 1024)
+DEFAULT_BN_MENU = (128, 256, 512, 1024)
+DEFAULT_BK_MENU = (128, 256, 512, 1024, 2048)
+DEFAULT_SPLIT_K_MENU = (1, 2, 4, 8)
+DEFAULT_GROUP_M_MENU = (1, 8)
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclass(frozen=True)
+class MemoryLevel:
+    """One level of the memory chain.  Sizes in bytes, rates in B/s.
+
+    ``capacity`` is per *scope instance* (per device / per partition / per
+    core) — the model runs a kernel on one core of one partition, so the
+    capacity a reuse window sees is exactly this number.
+    ``bandwidth`` is the byte rate across this level's port toward the
+    compute side; traffic served at level ℓ also crosses every port nearer
+    than ℓ (inclusive hierarchy).
+    ``holds_accumulator`` marks a staging level that must also host the f32
+    accumulator block (TPU VMEM scratch: yes; GPU LDS: no — accumulators
+    live in registers there).
+    """
+
+    name: str
+    capacity: int
+    bandwidth: float
+    latency: float = 0.0
+    scope: str = "device"
+    budget_fraction: float = 1.0
+    holds_accumulator: bool = False
+
+    def __post_init__(self):
+        if self.scope not in SCOPES:
+            raise ValueError(f"scope {self.scope!r} not in {SCOPES}")
+        if self.capacity <= 0 or self.bandwidth <= 0:
+            raise ValueError(f"non-positive capacity/bandwidth in {self}")
+        if not (0.0 < self.budget_fraction <= 1.0):
+            raise ValueError(f"budget_fraction out of (0,1]: {self}")
+
+    def budget(self) -> int:
+        """Bytes of this level a kernel may claim (the capacity filter)."""
+        return int(self.capacity * self.budget_fraction)
+
+
+# Legacy flat-field calibration aliases -> (level index, MemoryLevel field).
+# Index -1 is the staging level, 0 the backing memory.
+_LEVEL_ALIASES: Dict[str, Tuple[int, str]] = {
+    "hbm_bandwidth": (0, "bandwidth"),
+    "hbm_bytes": (0, "capacity"),
+    "hbm_latency": (0, "latency"),
+    "vmem_bytes": (-1, "capacity"),
+    "vmem_bandwidth": (-1, "bandwidth"),
+    "vmem_budget_fraction": (-1, "budget_fraction"),
+}
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Calibratable machine description: compute rates + the memory chain."""
+
+    name: str
+    # MXU / tensor-core macro-atom (M, N, K): instruction-level tile.
+    mxu_shape: Tuple[int, int, int]
+    # Native sublane tiling (second-minor, minor) per dtype-bytes.
+    lane_width: int
+    sublane_f32: int
+    # Peak matmul throughput per chip, FLOP/s, keyed by input dtype.
+    peak_flops: Mapping[str, float]
+    # Memory chain, outermost (backing memory) -> innermost (staging).
+    levels: Tuple[MemoryLevel, ...]
+    # Cores per partition-scope cache domain (XCDs on MI300X; 1 on TPU).
+    partitions: int = 1
+    # Interconnect (per chip).
+    ici_bandwidth: float = 0.0
+    ici_links: int = 0
+    # Fixed overheads (the paper's load/store "issue rate" axis).
+    dma_fixed: float = 0.0
+    kernel_launch: float = 0.0
+    pipeline_depth: int = 2
+    # Per-topology candidate menus (powers of two; selector shift trick).
+    bm_menu: Tuple[int, ...] = DEFAULT_BM_MENU
+    bn_menu: Tuple[int, ...] = DEFAULT_BN_MENU
+    bk_menu: Tuple[int, ...] = DEFAULT_BK_MENU
+    split_k_menu: Tuple[int, ...] = DEFAULT_SPLIT_K_MENU
+    group_m_menu: Tuple[int, ...] = DEFAULT_GROUP_M_MENU
+
+    def __post_init__(self):
+        if len(self.levels) < 2:
+            raise ValueError(
+                f"{self.name}: need at least (backing, staging) levels")
+        for menu_name in ("bm_menu", "bn_menu", "bk_menu",
+                          "split_k_menu", "group_m_menu"):
+            menu = getattr(self, menu_name)
+            if not menu or not all(_is_pow2(m) for m in menu):
+                raise ValueError(
+                    f"{self.name}: {menu_name} must be non-empty powers of "
+                    f"two, got {menu}")
+
+    # ---- the chain ------------------------------------------------------
+    @property
+    def backing(self) -> MemoryLevel:
+        """Outermost level: where compulsory traffic is served (HBM)."""
+        return self.levels[0]
+
+    @property
+    def staging(self) -> MemoryLevel:
+        """Innermost level: where the kernel stages blocks (VMEM/LDS)."""
+        return self.levels[-1]
+
+    @property
+    def cache_levels(self) -> Tuple[MemoryLevel, ...]:
+        """Intermediate levels (L2/LLC …), outermost -> innermost.  Empty on
+        the TPU 1-level special case."""
+        return self.levels[1:-1]
+
+    def placement_levels(self) -> Tuple[MemoryLevel, ...]:
+        """Levels whose capacity gates candidate legality: every level the
+        kernel *pins* working state in — the staging level, plus any deeper
+        core-scoped level a topology might model."""
+        return tuple(l for l in self.levels[1:]
+                     if l is self.staging or l.scope == "core")
+
+    # ---- legacy flat-field views (the whole repo reads these) -----------
+    @property
+    def hbm_bandwidth(self) -> float:
+        return self.backing.bandwidth
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.backing.capacity
+
+    @property
+    def hbm_latency(self) -> float:
+        return self.backing.latency
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.staging.capacity
+
+    @property
+    def vmem_bandwidth(self) -> float:
+        return self.staging.bandwidth
+
+    @property
+    def vmem_budget_fraction(self) -> float:
+        return self.staging.budget_fraction
+
+    def vmem_budget(self) -> int:
+        return self.staging.budget()
+
+    # ---- derived helpers -------------------------------------------------
+    def flops(self, dtype: str) -> float:
+        """Peak FLOP/s for ``dtype``.  Unknown dtypes raise (the seed fell
+        back to bf16 peak silently, mispricing every unknown-dtype GEMM)."""
+        try:
+            return self.peak_flops[dtype]
+        except KeyError:
+            raise KeyError(
+                f"{self.name} has no peak-FLOPs entry for dtype {dtype!r}; "
+                f"known dtypes: {sorted(self.peak_flops)}") from None
+
+    def sublane(self, dtype: str) -> int:
+        # Packing: second-minor native tile scales inversely with dtype width.
+        return self.sublane_f32 * (4 // min(DTYPE_BYTES[dtype], 4))
+
+    def ici_bandwidth_total(self) -> float:
+        return self.ici_bandwidth * self.ici_links
+
+    def with_calibration(self, **updates) -> "Topology":
+        """Paper §V-E: retarget by swapping measured constants only.
+
+        Accepts real ``Topology`` fields, the legacy flat aliases
+        (``hbm_bandwidth`` … ``vmem_budget_fraction``) which update the
+        chain ends, and ``levels`` itself for whole-chain swaps.
+        """
+        level_updates: Dict[int, Dict[str, object]] = {}
+        direct: Dict[str, object] = {}
+        for key, value in updates.items():
+            alias = _LEVEL_ALIASES.get(key)
+            if alias is not None:
+                idx, fname = alias
+                idx = idx % len(self.levels)
+                level_updates.setdefault(idx, {})[fname] = value
+            else:
+                direct[key] = value
+        if level_updates:
+            levels = tuple(
+                dataclasses.replace(l, **level_updates[i])
+                if i in level_updates else l
+                for i, l in enumerate(self.levels))
+            direct["levels"] = levels
+        return dataclasses.replace(self, **direct)
+
+    # ---- serialization ---------------------------------------------------
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["peak_flops"] = dict(self.peak_flops)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Topology":
+        d = dict(d)
+        d["levels"] = tuple(MemoryLevel(**lv) for lv in d["levels"])
+        d["mxu_shape"] = tuple(d["mxu_shape"])
+        for menu_name in ("bm_menu", "bn_menu", "bk_menu",
+                          "split_k_menu", "group_m_menu"):
+            if menu_name in d:
+                d[menu_name] = tuple(d[menu_name])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Topology":
+        return cls.from_dict(json.loads(text))
+
+
+def calibration_field_names(topo: Topology) -> Tuple[str, ...]:
+    """Names ``with_calibration``/``calibrate`` accept for this topology."""
+    real = tuple(f.name for f in dataclasses.fields(topo))
+    return real + tuple(_LEVEL_ALIASES)
+
+
+# Backward-compatible name: the whole repo grew up calling this HardwareSpec.
+HardwareSpec = Topology

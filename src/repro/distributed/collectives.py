@@ -26,7 +26,9 @@ try:                                   # jax >= 0.5 exports it at top level
 except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.dtypes import DTYPE_BYTES
+from repro.core.hardware import TPU_V5E
+from repro.core.topology import HardwareSpec
 from repro.core.latency import GemmProblem
 from repro.core.selector import select_gemm_config
 from repro.kernels import ops as kops

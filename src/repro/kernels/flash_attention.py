@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.dtypes import DTYPE_BYTES
+from repro.core.hardware import TPU_V5E
+from repro.core.topology import HardwareSpec
 from repro.core.latency import cdiv
 
 _NEG_INF = float("-inf")

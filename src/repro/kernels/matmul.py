@@ -9,9 +9,12 @@ Grid layout: ``(num_output_tiles, split_k, Tk)`` iterated row-major (k
 fastest, then the k-shard index), so the f32 accumulator scratch carries
 across ALL of a tile's k-shards and flushes exactly once — split-K is
 *in-kernel*: no ``(sk, M, N)`` HBM partial tensor, no follow-up combine pass.
-The grouped iteration order (paper Alg. 6's cache-tile factorization; on TPU
-it selects which operand benefits from the Mosaic revisit-skip) is folded
-into the index maps.
+The grouped iteration order (paper Alg. 6's cache-tile factorization) is
+folded into the index maps; since the topology refactor the selector prices
+``group_m`` per memory hierarchy — on TPU it selects which operand benefits
+from the Mosaic revisit-skip, on multi-level topologies it buys L2 residency
+of the re-walked operand — and this kernel executes whatever swizzle the
+selection carries, semantics unchanged.
 
 The epilogue (bias add, gelu/silu/swiglu-gate, residual add, out-dtype cast
 — see ``repro.core.latency.Epilogue``) runs inside the flush step on the f32

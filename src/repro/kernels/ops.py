@@ -22,7 +22,9 @@ from typing import Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.hardware import DTYPE_BYTES, TPU_V5E, HardwareSpec
+from repro.core.dtypes import DTYPE_BYTES
+from repro.core.hardware import TPU_V5E
+from repro.core.topology import HardwareSpec
 from repro.core.latency import EPILOGUE_NONE, Epilogue, TileConfig, cdiv
 from repro.core.selector import select_gemm_config
 from repro.kernels import ref

@@ -5,6 +5,10 @@
 
 Requests are processed as a continuous batch: one prefill (returns the
 decode cache), then step-synchronous decode with temperature sampling.
+
+Set ``REPRO_SELECTION_CACHE=/path/to/selections.json`` to persist GEMM
+config selections across server processes: a warm restart replays every
+previously selected shape from disk with zero cold-path scoring.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.selector import load_selection_cache
 from repro.distributed import (batch_shardings, cache_shardings,
                                param_shardings, replicated)
 from repro.launch.mesh import make_local_mesh
@@ -35,6 +40,10 @@ def main() -> int:
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    n_warm = load_selection_cache()            # $REPRO_SELECTION_CACHE
+    if n_warm:
+        print(f"[selector] warm-started {n_warm} persisted GEMM selections")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)

@@ -1,0 +1,414 @@
+"""Topology refactor tests: 1-level parity with the seed/PR-1 model,
+per-level capacity filters, preset round-trips, hierarchy-priced selection,
+and the persistent selection table."""
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # CPU container: shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    GPU_H100_LIKE,
+    GPU_MI300X_LIKE,
+    PRESETS,
+    TPU_V5E,
+    GemmProblem,
+    MemoryLevel,
+    TileConfig,
+    Topology,
+    calibrate,
+    candidate_tiles,
+    clear_selection_cache,
+    fits_placement,
+    gemm_latency,
+    hbm_traffic,
+    level_traffic,
+    score_candidate,
+    score_candidates,
+    select_gemm_config,
+    simulate_gemm,
+    staging_working_set,
+)
+from repro.core.selector import (
+    argmin_candidate,
+    candidate_arrays,
+    load_selection_cache,
+    select_fast,
+)
+
+MULTI_LEVEL = (GPU_MI300X_LIKE, GPU_H100_LIKE)
+
+# ---------------------------------------------------------------------------
+# Golden selections captured from PR 1 (pre-refactor HEAD) on tpu_v5e for
+# every benchmarks/llama3_shapes.py shape: config 5-tuple, candidate count,
+# and the exact float64 predicted total (hex, bit-for-bit).
+# ---------------------------------------------------------------------------
+PR1_GOLDEN = {
+    "8b/qkv/t1024": (1024, 6144, 4096, (512, 1024, 128, 1, 1), 176,
+                     "0x1.19b6b4bb2dfd5p-12"),
+    "8b/attn_out/t1024": (1024, 4096, 4096, (512, 1024, 128, 1, 1), 176,
+                          "0x1.7c8a43baaad6dp-13"),
+    "8b/gate_up/t1024": (1024, 28672, 4096, (512, 1024, 128, 1, 1), 140,
+                         "0x1.41e60110df109p-10"),
+    "8b/down/t1024": (1024, 4096, 14336, (512, 1024, 128, 1, 1), 182,
+                      "0x1.43be801948227p-11"),
+    "8b/lm_head/t1024": (1024, 128256, 4096, (1024, 512, 128, 1, 1), 140,
+                         "0x1.67178bc027a0bp-8"),
+    "8b/qkv/t4096": (4096, 6144, 4096, (512, 1024, 128, 1, 1), 140,
+                     "0x1.142d37a1f2c7ap-10"),
+    "8b/attn_out/t4096": (4096, 4096, 4096, (512, 1024, 128, 1, 1), 140,
+                          "0x1.71774988346b6p-11"),
+    "8b/gate_up/t4096": (4096, 28672, 4096, (512, 1024, 128, 1, 1), 140,
+                         "0x1.4083a1ca90432p-8"),
+    "8b/down/t4096": (4096, 4096, 14336, (512, 1024, 128, 1, 1), 140,
+                      "0x1.40f9c18caa879p-9"),
+    "8b/lm_head/t4096": (4096, 128256, 4096, (1024, 512, 128, 1, 1), 140,
+                         "0x1.66bef3ee93ed5p-6"),
+    "8b/qkv/t8192": (8192, 6144, 4096, (512, 1024, 128, 1, 1), 140,
+                     "0x1.1340f81dbe3eap-9"),
+    "8b/attn_out/t8192": (8192, 4096, 4096, (512, 1024, 128, 1, 1), 140,
+                          "0x1.6f9eca7fcb598p-10"),
+    "8b/gate_up/t8192": (8192, 28672, 4096, (512, 1024, 128, 1, 1), 140,
+                         "0x1.404891e98320ep-7"),
+    "8b/down/t8192": (8192, 4096, 14336, (512, 1024, 128, 1, 1), 140,
+                      "0x1.4083a1ca90432p-8"),
+    "8b/lm_head/t8192": (8192, 128256, 4096, (1024, 512, 128, 1, 1), 140,
+                         "0x1.66b02ff650a4cp-5"),
+    "70b/qkv/t1024": (1024, 10240, 8192, (512, 1024, 128, 1, 1), 154,
+                      "0x1.cce8dc660cfd4p-11"),
+    "70b/attn_out/t1024": (1024, 8192, 8192, (512, 1024, 128, 1, 1), 154,
+                           "0x1.71774988346b6p-11"),
+    "70b/gate_up/t1024": (1024, 57344, 8192, (512, 1024, 128, 1, 1), 140,
+                          "0x1.4083a1ca90432p-8"),
+    "70b/down/t1024": (1024, 8192, 28672, (512, 1024, 128, 1, 1), 155,
+                       "0x1.40f9c18caa879p-9"),
+    "70b/lm_head/t1024": (1024, 128256, 8192, (1024, 512, 128, 1, 1), 140,
+                          "0x1.66dc7bdf1a7e7p-7"),
+    "70b/qkv/t4096": (4096, 10240, 8192, (512, 1024, 128, 1, 1), 140,
+                      "0x1.ca241dd96f626p-9"),
+    "70b/attn_out/t4096": (4096, 8192, 8192, (512, 1024, 128, 1, 1), 140,
+                           "0x1.6eb28afb96d08p-9"),
+    "70b/gate_up/t4096": (4096, 57344, 8192, (512, 1024, 128, 1, 1), 140,
+                          "0x1.402b09f8fc8fcp-6"),
+    "70b/down/t4096": (4096, 8192, 28672, (512, 1024, 128, 1, 1), 140,
+                       "0x1.404891e98320ep-7"),
+    "70b/lm_head/t4096": (4096, 128256, 8192, (1024, 512, 128, 1, 1), 140,
+                          "0x1.66b02ff650a4cp-5"),
+    "70b/qkv/t8192": (8192, 10240, 8192, (512, 1024, 128, 1, 1), 140,
+                      "0x1.c9adfe17551dfp-8"),
+    "70b/attn_out/t8192": (8192, 8192, 8192, (512, 1024, 128, 1, 1), 140,
+                           "0x1.6e3c6b397c8c1p-8"),
+    "70b/gate_up/t8192": (8192, 57344, 8192, (512, 1024, 128, 1, 1), 140,
+                          "0x1.401c4600b9473p-5"),
+    "70b/down/t8192": (8192, 8192, 28672, (512, 1024, 128, 1, 1), 140,
+                       "0x1.402b09f8fc8fcp-6"),
+    "70b/lm_head/t8192": (8192, 128256, 8192, (1024, 512, 128, 1, 1), 140,
+                          "0x1.66a8cdfa2f007p-4"),
+}
+
+DIMS = st.integers(min_value=1, max_value=8192)
+
+
+def test_one_level_reproduces_pr1_bit_for_bit():
+    """Acceptance: on the 1-level tpu_v5e chain the refactored model returns
+    the SAME config as PR 1 for every llama3 sweep shape, with the predicted
+    total latency bit-for-bit identical (exact float64 hex)."""
+    clear_selection_cache()
+    for name, (M, N, K, cfg, n_cands, total_hex) in PR1_GOLDEN.items():
+        s = select_gemm_config(M, N, K, hw=TPU_V5E)
+        c = s.config
+        assert (c.bm, c.bn, c.bk, c.split_k, c.group_m) == cfg, name
+        assert s.n_candidates == n_cands, name
+        assert s.predicted.total.hex() == total_hex, name
+
+
+def test_tpu_chain_is_one_level():
+    for name in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
+        hw = PRESETS[name]
+        assert hw.cache_levels == ()
+        assert hw.backing.name == "hbm" and hw.staging.name == "vmem"
+        assert hw.staging.holds_accumulator
+
+
+@settings(max_examples=30, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_per_level_capacity_filter_property(M, N, K):
+    """Every enumerated candidate fits the budget of every placement level,
+    on every preset (the generalized VMEM/LDS filter)."""
+    p = GemmProblem(M=M, N=N, K=K)
+    for hw in PRESETS.values():
+        cands = candidate_tiles(p, hw)
+        assert cands, (hw.name, M, N, K)
+        for t in cands[:25]:
+            assert fits_placement(t, p.in_dtype, hw)
+            ws = staging_working_set(t, p.in_dtype, hw)
+            for lvl in hw.placement_levels():
+                assert ws <= lvl.budget(), (hw.name, t, lvl.name)
+
+
+def test_gpu_staging_excludes_accumulator():
+    """GPU-shaped staging (LDS/SMEM) holds only the pipelined input blocks;
+    TPU VMEM also hosts the f32 accumulator."""
+    t = TileConfig(bm=128, bn=128, bk=64)
+    gpu = staging_working_set(t, "bfloat16", GPU_H100_LIKE)
+    tpu = staging_working_set(t, "bfloat16", TPU_V5E)
+    assert tpu - gpu == 128 * 128 * 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_level_traffic_conservation(M, N, K):
+    """Per-level served bytes sum to the all-HBM base: caches redirect
+    traffic, they never create or destroy it.  On 1-level chains the single
+    entry IS the base."""
+    p = GemmProblem(M=M, N=N, K=K)
+    flat = level_traffic(p, TileConfig(bm=128, bn=128, bk=128), TPU_V5E)
+    assert flat == {"hbm": hbm_traffic(
+        p, TileConfig(bm=128, bn=128, bk=128))}
+    for hw in MULTI_LEVEL:
+        for t in candidate_tiles(p, hw)[:12]:
+            served = level_traffic(p, t, hw)
+            base = hbm_traffic(p, t)
+            assert math.isclose(sum(served.values()), base, rel_tol=1e-9)
+            assert served[hw.backing.name] >= 0.0
+            # backing serves at least the compulsory traffic
+            assert served[hw.backing.name] >= p.min_bytes * 0.999
+
+
+@settings(max_examples=12, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_multi_level_scoring_parity(M, N, K):
+    """Scalar fast path == full model and == vectorized batch scorer on the
+    multi-level presets (the three hand-synced copies stay in lockstep)."""
+    import numpy as np
+    p = GemmProblem(M=M, N=N, K=K)
+    for hw in MULTI_LEVEL:
+        cands = candidate_tiles(p, hw)[:40]
+        vec = score_candidates(p, cands, hw)
+        for t, v in zip(cands, vec):
+            full = gemm_latency(p, t, hw).total
+            assert math.isclose(score_candidate(p, t, hw), full,
+                                rel_tol=1e-12)
+            assert math.isclose(v, full, rel_tol=1e-9), (hw.name, t)
+
+
+def test_scoring_parity_group_clamped_to_single_row():
+    """group_m > 1 with Tm == 1 clamps to ungrouped in BOTH the scalar and
+    vectorized spill recurrences (regression: the vectorized path once
+    branched on raw gm and billed phantom cache hits)."""
+    p = GemmProblem(M=128, N=8192, K=8192)
+    t = TileConfig(bm=128, bn=128, bk=128, group_m=8)   # Tm == 1
+    for hw in MULTI_LEVEL:
+        full = gemm_latency(p, t, hw).total
+        assert math.isclose(score_candidate(p, t, hw), full, rel_tol=1e-12)
+        assert math.isclose(float(score_candidates(p, [t], hw)[0]), full,
+                            rel_tol=1e-9), hw.name
+
+
+def test_calibrated_same_name_topology_gets_fresh_filter():
+    """with_calibration keeps the preset name; the cached menu grid must
+    not serve the old capacity filter (regression: name-only cache key)."""
+    shrunk = TPU_V5E.with_calibration(vmem_bytes=2 * 1024**2)
+    p = GemmProblem(M=4096, N=4096, K=4096)
+    budget = shrunk.vmem_budget()
+    assert select_gemm_config(4096, 4096, 4096, hw=TPU_V5E).config  # warm
+    clear_selection_cache()
+    s = select_gemm_config(4096, 4096, 4096, hw=shrunk)
+    assert staging_working_set(s.config, p.in_dtype, shrunk) <= budget
+    for t in candidate_tiles(p, shrunk):
+        assert staging_working_set(t, p.in_dtype, shrunk) <= budget
+
+
+def test_select_fast_parity_on_multi_level():
+    """The cached-menu-grid fast selector agrees with the explicit
+    enumeration + vectorized argmin on multi-level presets too."""
+    shapes = [(4096, 4096, 4096), (100, 300, 77), (8, 8192, 8192),
+              (640, 256, 256), (1024, 6144, 4096)]
+    for hw in MULTI_LEVEL:
+        for (M, N, K) in shapes:
+            p = GemmProblem(M=M, N=N, K=K)
+            tiles = candidate_tiles(p, hw)
+            bm, bn, bk, sk, gm = candidate_arrays(p, hw)
+            assert len(bm) == len(tiles)
+            for i, t in enumerate(tiles):
+                assert (t.bm, t.bn, t.bk, t.split_k, t.group_m) == \
+                    (int(bm[i]), int(bn[i]), int(bk[i]),
+                     int(sk[i]), int(gm[i]))
+            best, n = select_fast(p, hw)
+            assert n == len(tiles)
+            assert best == argmin_candidate(p, tiles, hw), (hw.name, M, N, K)
+
+
+def test_hierarchy_changes_selection_on_llama3_shapes():
+    """Acceptance: on a multi-level preset at least one llama3 sweep shape
+    selects a different group_m / tiling BECAUSE OF the cache terms — the
+    cache-stripped ablation (same constants, (backing, staging) only)
+    chooses differently."""
+    from benchmarks.hierarchy_sweep import strip_caches
+    from benchmarks.llama3_shapes import llama3_gemms
+    for full in MULTI_LEVEL:
+        flat = strip_caches(full)
+        flips = gm_flips = 0
+        for size in ("8b", "70b"):
+            for (_, M, N, K) in llama3_gemms(size):
+                a = select_gemm_config(M, N, K, hw=full).config
+                b = select_gemm_config(M, N, K, hw=flat).config
+                flips += a != b
+                gm_flips += a.group_m != b.group_m
+        assert flips >= 1, full.name
+        assert gm_flips >= 1, full.name
+
+
+def test_grouped_swizzle_priced_not_gated():
+    """On multi-level chains group_m > 1 stays in the candidate space for
+    Tk > 1 (priced by L2 residency); on the TPU 1-level chain it is pruned
+    unless the revisit model can trigger (Tk == 1)."""
+    from repro.core import grid_shape
+    p = GemmProblem(M=4096, N=4096, K=8192)
+    for t in candidate_tiles(p, TPU_V5E):
+        if t.group_m > 1:
+            assert grid_shape(p, t)[2] == 1           # revisit-gated
+    for hw in MULTI_LEVEL:
+        assert any(t.group_m > 1 and grid_shape(p, t)[2] > 1
+                   for t in candidate_tiles(p, hw)), hw.name
+
+
+def test_bottleneck_can_be_cache_level():
+    """A multi-level breakdown reports per-level bytes/seconds and may
+    bottleneck on a cache port."""
+    p = GemmProblem(M=8192, N=8192, K=28672)
+    s = select_gemm_config(8192, 8192, 28672, hw=GPU_MI300X_LIKE)
+    b = s.predicted
+    assert set(b.level_bytes) == {"hbm", "mall", "l2"}
+    assert set(b.level_seconds) == {"hbm", "mall", "l2"}
+    assert math.isclose(sum(b.level_bytes.values()),
+                        hbm_traffic(p, s.config), rel_tol=1e-9)
+    assert b.hbm_traffic == b.level_bytes["hbm"]
+    assert b.hbm_traffic < hbm_traffic(p, s.config)   # caches absorbed some
+
+
+def test_simulator_level_counters():
+    """The event simulator's measured reuse-distance counters split bytes
+    across levels; on 1-level chains all fetch+write bytes are HBM."""
+    p = GemmProblem(M=2048, N=2048, K=2048)
+    t = TileConfig(bm=256, bn=256, bk=256)
+    r = simulate_gemm(p, t, TPU_V5E)
+    assert set(r.level_bytes) == {"hbm"}
+    assert r.level_bytes["hbm"] == r.hbm_bytes
+    tg = TileConfig(bm=128, bn=128, bk=64, group_m=4)
+    rg = simulate_gemm(p, tg, GPU_H100_LIKE)
+    assert set(rg.level_bytes) == {"hbm", "l2"}
+    assert math.isclose(sum(rg.level_bytes.values()), rg.hbm_bytes,
+                        rel_tol=1e-9)
+    assert rg.level_bytes["l2"] > 0.0                 # reuse hits measured
+    assert rg.level_bytes["hbm"] >= p.min_bytes * 0.999
+
+
+# ---------------------------------------------------------------------------
+# Preset serialization round-trip.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PRESETS))
+def test_preset_serialization_round_trip(name):
+    hw = PRESETS[name]
+    assert Topology.from_dict(hw.to_dict()) == hw
+    assert Topology.from_json(hw.to_json()) == hw
+    # JSON text itself is stable/parseable
+    d = json.loads(hw.to_json())
+    assert d["name"] == name
+    assert [lv["name"] for lv in d["levels"]] == [l.name for l in hw.levels]
+
+
+def test_with_calibration_legacy_aliases():
+    hw = TPU_V5E.with_calibration(hbm_bandwidth=1e12, vmem_bytes=2**20)
+    assert hw.hbm_bandwidth == 1e12
+    assert hw.vmem_bytes == 2**20
+    assert hw.levels[0].bandwidth == 1e12
+    assert TPU_V5E.hbm_bandwidth == 819e9             # original untouched
+
+
+# ---------------------------------------------------------------------------
+# Satellite: flops() unknown-dtype KeyError + calibrate() error path.
+# ---------------------------------------------------------------------------
+
+def test_flops_unknown_dtype_raises():
+    with pytest.raises(KeyError) as e:
+        TPU_V5E.flops("float64")
+    msg = str(e.value)
+    assert "float64" in msg and "bfloat16" in msg    # lists known dtypes
+    assert TPU_V5E.flops("bfloat16") == 197e12
+
+
+def test_calibrate_unknown_field_raises():
+    with pytest.raises(KeyError) as e:
+        calibrate(TPU_V5E, {"warp_speed": lambda: 1.0})
+    assert "warp_speed" in str(e.value)
+    assert "hbm_bandwidth" in str(e.value)           # lists calibratables
+    hw = calibrate(TPU_V5E, {"hbm_bandwidth": lambda: 900e9})
+    assert hw.hbm_bandwidth == 900e9
+
+
+def test_memory_level_validation():
+    with pytest.raises(ValueError):
+        MemoryLevel(name="x", capacity=1, bandwidth=1.0, scope="galaxy")
+    with pytest.raises(ValueError):
+        MemoryLevel(name="x", capacity=0, bandwidth=1.0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(TPU_V5E, levels=(TPU_V5E.levels[0],))
+    with pytest.raises(ValueError):
+        dataclasses.replace(TPU_V5E, bm_menu=(8, 24))  # not a power of two
+
+
+# ---------------------------------------------------------------------------
+# Satellite: persistent on-disk selection table.
+# ---------------------------------------------------------------------------
+
+def test_disk_selection_cache_warm_start(tmp_path, monkeypatch):
+    import repro.core.selector as selmod
+    path = str(tmp_path / "selections.json")
+    monkeypatch.setenv("REPRO_SELECTION_CACHE", path)
+    load_selection_cache(path)                        # activate (empty)
+    clear_selection_cache()
+    s1 = select_gemm_config(1536, 1536, 1536)
+    assert os.path.exists(path)                       # write-through
+    table = json.load(open(path))
+    assert len(table) == 1
+
+    # New "process": fresh in-memory caches, table re-read from disk; the
+    # cold scoring path must never run (zero cold-path scoring).
+    clear_selection_cache()
+    assert load_selection_cache(path) == 1
+
+    def boom(*a, **kw):
+        raise AssertionError("cold scoring ran despite warm table")
+    monkeypatch.setattr(selmod, "select_fast", boom)
+    s2 = select_gemm_config(1536, 1536, 1536)
+    assert s2.config == s1.config
+    assert s2.n_candidates == s1.n_candidates
+    assert s2.predicted.total == s1.predicted.total   # repriced identically
+
+    # A corrupt/stale entry must fall back to cold scoring, not crash or
+    # return an illegal config.
+    monkeypatch.setattr(selmod, "select_fast",
+                        lambda *a, **kw: (s1.config, s1.n_candidates))
+    table = json.load(open(path))
+    k = next(iter(table))
+    table[k] = {"config": {"bm": 1 << 20, "bn": 1 << 20, "bk": 1 << 20,
+                           "split_k": 1, "group_m": 1},
+                "n_candidates": 1}
+    json.dump(table, open(path, "w"))
+    clear_selection_cache()
+    assert load_selection_cache(path) == 1
+    s3 = select_gemm_config(1536, 1536, 1536)         # oversized -> cold
+    assert s3.config == s1.config
+
+    # deactivate persistence for the rest of the suite
+    monkeypatch.delenv("REPRO_SELECTION_CACHE")
+    load_selection_cache()
+    clear_selection_cache()
