@@ -39,7 +39,7 @@ def run(sizes=("8b", "70b"), presets=MULTI_LEVEL_PRESETS,
         full = get_hardware(hw_name)
         flat = strip_caches(full)
         cache_names = [lvl.name for lvl in full.cache_levels]
-        flips = gm_flips = 0
+        flips = gm_flips = ksplit = 0
         hbm_saved = []
         for size in sizes:
             for (name, M, N, K) in llama3_gemms(size):
@@ -49,6 +49,8 @@ def run(sizes=("8b", "70b"), presets=MULTI_LEVEL_PRESETS,
                 flipped = sel.config != abl.config
                 flips += flipped
                 gm_flips += sel.config.group_m != abl.config.group_m
+                ksplit += (sel.config.split_k > 1
+                           or sel.config.schedule == "stream_k")
                 served = level_traffic(p, sel.config, full)
                 # HBM bytes the hierarchy terms removed vs the ablation's
                 # choice priced flat (all re-reads spill to HBM).
@@ -66,11 +68,13 @@ def run(sizes=("8b", "70b"), presets=MULTI_LEVEL_PRESETS,
                     int(flipped),
                     "|".join(f"{k}:{served[k]:.3e}" for k in served),
                     sim_split, f"{100*saved:.1f}",
+                    f"{sel.predicted.occupancy:.4f}", sel.predicted.waves,
                 ])
         summary[hw_name] = {
             "n": len(hbm_saved),
             "flips": flips,
             "group_m_flips": gm_flips,
+            "k_split_or_stream": ksplit,
             "mean_hbm_saved": sum(hbm_saved) / len(hbm_saved),
             "cache_levels": cache_names,
         }
@@ -78,12 +82,13 @@ def run(sizes=("8b", "70b"), presets=MULTI_LEVEL_PRESETS,
             s = summary[hw_name]
             print(f"[hierarchy:{hw_name}] cache levels {cache_names}: "
                   f"{s['flips']}/{s['n']} selections changed by the "
-                  f"hierarchy terms ({s['group_m_flips']} group_m flips), "
+                  f"hierarchy terms ({s['group_m_flips']} group_m flips, "
+                  f"{s['k_split_or_stream']} split-K/stream-K), "
                   f"mean HBM-byte saving {100*s['mean_hbm_saved']:.1f}%")
     write_csv("hierarchy_sweep.csv",
               ["hw", "gemm", "M", "N", "K", "selected", "flat_ablation",
                "flipped", "model_level_bytes", "sim_level_bytes",
-               "hbm_saved_pct"], rows)
+               "hbm_saved_pct", "occupancy", "waves"], rows)
     return summary
 
 

@@ -23,7 +23,8 @@ def main() -> None:
 
     from benchmarks import (fused_epilogue, hierarchy_sweep, llama3_shapes,
                             peak_vs_intensity, roofline_table,
-                            selection_efficiency, selection_overhead)
+                            selection_efficiency, selection_overhead,
+                            wave_quantization)
     from repro.core import clear_selection_cache, select_gemm_config
 
     n_eff = 1000 if args.full else (8 if args.smoke else 120)
@@ -79,6 +80,17 @@ def main() -> None:
     flips = sum(s["flips"] for s in hs.values())
     print(f"hierarchy_sweep,{dt:.1f},"
           f"flips={flips}/{n_hs}_presets={len(hs)}")
+
+    # §Occupancy — tail-wave cliffs (Alg. 4 chip-wide) + schedule recovery.
+    t0 = time.perf_counter()
+    wq = wave_quantization.run(simulate=not args.smoke, smoke=args.smoke,
+                               verbose=False)
+    n_wq = sum(s["points"] for s in wq.values())
+    dt = (time.perf_counter() - t0) / max(n_wq, 1) * 1e6
+    dips = [s["model_dip"] for s in wq.values()]
+    rec = sum(s["selection_recovered"] for s in wq.values())
+    print(f"wave_quantization,{dt:.1f},"
+          f"max_model_dip={100*max(dips):.0f}%_recovered={rec}/{n_wq}")
 
     # Fig. 4 — percent of peak vs arithmetic intensity.
     t0 = time.perf_counter()

@@ -38,7 +38,7 @@ def main():
         sim = simulate_gemm(p, cfg, hw)
         print(f"{str(cfg):24s} {pred.total*1e6:9.1f} {sim.time*1e6:9.1f} "
               f"{p.flops/sim.time/1e12:9.1f} "
-              f"{reuse_fraction(p, cfg):6.2f}  {pred.bottleneck}")
+              f"{reuse_fraction(p, cfg, hw):6.2f}  {pred.bottleneck}")
 
     if hw.cache_levels:
         best_cfg, best_pred = ranked[0]

@@ -109,6 +109,9 @@ TPU_V4 = TPU_V5E.with_calibration(
 # Menus are finer than the TPU's: KB-scale staging wants smaller blocks, and
 # group_m spans 1..16 because grouped swizzle is priced (L2 residency of the
 # re-walked operand), not gated on the Pallas revisit trick.
+# partitions x core_count is the Alg. 4 wave denominator (DESIGN.md §2
+# occupancy stage): tail-wave shapes on these presets select split_k > 1 or
+# the stream_k schedule, which is why schedule_menu carries both.
 # ---------------------------------------------------------------------------
 
 GPU_MI300X_LIKE = Topology(
@@ -134,6 +137,7 @@ GPU_MI300X_LIKE = Topology(
                     scope="core"),                       # 64 KiB per CU
     ),
     partitions=8,                   # XCDs
+    core_count=38,                  # CUs per XCD -> 304 chip-wide
     ici_bandwidth=64e9,             # xGMI per link
     ici_links=7,
     dma_fixed=1.0e-9,               # issue cost amortizes over parallel CUs
@@ -144,6 +148,7 @@ GPU_MI300X_LIKE = Topology(
     bk_menu=(32, 64, 128),
     split_k_menu=(1, 2, 4, 8),
     group_m_menu=(1, 2, 4, 8, 16),
+    schedule_menu=("data_parallel", "stream_k"),
 )
 
 GPU_H100_LIKE = Topology(
@@ -167,6 +172,7 @@ GPU_H100_LIKE = Topology(
                     scope="core"),                       # 228 KiB per SM
     ),
     partitions=1,
+    core_count=132,                 # SMs (one L2 partition modeled)
     ici_bandwidth=50e9,             # NVLink4 per link
     ici_links=18,
     dma_fixed=1.0e-9,               # issue cost amortizes over parallel SMs
@@ -177,6 +183,7 @@ GPU_H100_LIKE = Topology(
     bk_menu=(32, 64, 128),
     split_k_menu=(1, 2, 4, 8),
     group_m_menu=(1, 2, 4, 8, 16),
+    schedule_menu=("data_parallel", "stream_k"),
 )
 
 PRESETS: Dict[str, Topology] = {

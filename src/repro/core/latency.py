@@ -41,7 +41,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
-from repro.core.topology import HardwareSpec, MemoryLevel, Topology
+from repro.core.topology import SCHEDULES, HardwareSpec, MemoryLevel, Topology
 
 
 def cdiv(a: int, b: int) -> int:
@@ -151,9 +151,18 @@ class TileConfig:
     """One point of the candidate space (the paper's tiling hierarchy knobs).
 
     bm, bn, bk: the VMEM block (paper: workgroup/shared-memory tile).
-    split_k   : k-parallel partial-accumulation factor (Stream-K analogue).
+    split_k   : k-parallel partial-accumulation factor.
     group_m   : grouped grid-iteration order (paper: cache-tile factorization;
                 on TPU it controls which operand the revisit-skip applies to).
+    schedule  : how work units map onto cores (the occupancy stage):
+                ``data_parallel`` — one unit per (output tile, k-shard),
+                wave-quantized over ``Topology.total_cores()``;
+                ``stream_k`` — persistent kernel, the flattened k-step space
+                split into one contiguous strip per core (no tile-granular
+                tail wave; strip-boundary tiles pay a partial fixup).
+                On single-core chains (TPU) both schedules execute — and are
+                priced — identically; the kernel lowers stream_k to the
+                existing sequential split-K grid.
     """
 
     bm: int
@@ -161,6 +170,12 @@ class TileConfig:
     bk: int
     split_k: int = 1
     group_m: int = 1
+    schedule: str = "data_parallel"
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; choose from {SCHEDULES}")
 
     def __str__(self) -> str:
         s = f"{self.bm}x{self.bn}x{self.bk}"
@@ -168,6 +183,8 @@ class TileConfig:
             s += f"/sk{self.split_k}"
         if self.group_m > 1:
             s += f"/g{self.group_m}"
+        if self.schedule == "stream_k":
+            s += "/streamk"
         return s
 
 
@@ -190,6 +207,12 @@ class LatencyBreakdown:
     # only and `hbm`/`hbm_traffic` above are their single values.
     level_bytes: Mapping[str, float] = field(default_factory=dict)
     level_seconds: Mapping[str, float] = field(default_factory=dict)
+    # Occupancy stage (Alg. 4 chip-wide): schedulable work units, waves over
+    # total_cores, and the tail-wave efficiency units / (waves * cores) in
+    # (0, 1].  Single-core chains report units == waves, occupancy == 1.0.
+    units: int = 0
+    waves: int = 0
+    occupancy: float = 1.0
 
     @property
     def efficiency(self) -> float:
@@ -212,6 +235,44 @@ def grid_shape(p: GemmProblem, t: TileConfig) -> Tuple[int, int, int]:
     """(Tm, Tn, Tk) grid; split_k multiplies Tk and divides the k extent."""
     k_per_split = cdiv(p.K, t.split_k)
     return cdiv(p.M, t.bm), cdiv(p.N, t.bn), cdiv(k_per_split, t.bk) * t.split_k
+
+
+# ---------------------------------------------------------------------------
+# Alg. 4 — chip-wide occupancy / wave model.
+#
+# The paper prices wave quantization over ALL CUs of the chip; until this
+# stage the model ran one core of one partition, so GPU presets selected as
+# if the chip had a single CU.  Work units are scheduled round-robin over
+# ``Topology.total_cores()``: under ``data_parallel`` a unit is one
+# (output tile, k-shard) — split-K multiplies units, which is exactly its
+# GPU rationale — and under ``stream_k`` the flattened k-step space is cut
+# into one contiguous strip per core, erasing the tile-granular tail wave
+# at the cost of a partial fixup for strip-boundary tiles.
+#
+# The quantization factor waves * cores / units >= 1 scales every per-core
+# term (MXU, staging port, DMA issue); chip-shared memory ports are not
+# scaled — a tail wave leaves bandwidth idle, not busy.  On a single-core
+# chain the factor is exactly 1.0, reproducing the PR 2 model bit-for-bit.
+# ---------------------------------------------------------------------------
+
+def wave_model(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+               ) -> Tuple[int, int, float]:
+    """Returns (units, waves, quantization factor == waves * cores / units).
+
+    ``data_parallel``: units = output tiles x split_k (each k-shard is an
+    independently schedulable workgroup on a multi-core chip).
+    ``stream_k``: units = total k-steps — occupancy is quantized at k-step
+    granularity, so the factor is ~1 for any problem with >= cores steps.
+    Single-core chains: units == waves, factor == 1.0 exactly.
+    """
+    C = hw.total_cores()
+    Tm, Tn, Tk = grid_shape(p, t)
+    if t.schedule == "stream_k" and C > 1:
+        units = Tm * Tn * Tk * p.batch
+    else:
+        units = Tm * Tn * p.batch * t.split_k
+    waves = cdiv(units, C)
+    return units, waves, waves * C / units
 
 
 # ---------------------------------------------------------------------------
@@ -276,21 +337,27 @@ def revisit_fractions(p: GemmProblem, t: TileConfig) -> Tuple[float, float]:
     return 0.0, b_skip
 
 
-def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
-    """Exact HBM bytes for the whole GEMM under the revisit model.
+def hbm_traffic(p: GemmProblem, t: TileConfig, *, revisit: bool = True
+                ) -> float:
+    """Exact fetched+written bytes for the whole GEMM (the all-HBM base).
 
     Without revisits: A is fetched Tn times over, B Tm times over
     (the paper's "uncached reads" U, Alg. 5, with hit rate applied).
+    ``revisit=False`` disables the Pallas revisit skip — on multi-core
+    chains consecutive grid steps run on *different* cores, so there is no
+    staging-persistence to skip into; the re-reads instead become cache-hit
+    candidates (one-tile reuse windows) priced by ``level_traffic``.
 
-    Split-K runs *in-kernel* (one ``pallas_call``, grid ``(tiles, sk, Tk)``,
-    k-shards accumulated in VMEM scratch, single flush) so it moves no HBM
-    partials — its only residual cost is the extra K padding already captured
-    by ``grid_shape``.  Epilogue operands (bias / gate / residual) are read
-    once per output tile; fused, the output is still written exactly once.
+    Split-K runs *in-kernel* on a single-core chain (one ``pallas_call``,
+    grid ``(tiles, sk, Tk)``, k-shards accumulated in VMEM scratch, single
+    flush) so it moves no HBM partials there; multi-core partial/combine
+    and stream-K fixup traffic is priced by ``schedule_extra_classes``.
+    Epilogue operands (bias / gate / residual) are read once per output
+    tile; fused, the output is still written exactly once.
     """
     Tm, Tn, Tk = grid_shape(p, t)
     bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
-    a_skip, b_skip = revisit_fractions(p, t)
+    a_skip, b_skip = revisit_fractions(p, t) if revisit else (0.0, 0.0)
     # Padded fetch sizes: DMA moves whole blocks (edge blocks move real bytes;
     # we model the exact edge in the simulator, the mean here).
     a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
@@ -318,7 +385,7 @@ def hbm_traffic(p: GemmProblem, t: TileConfig) -> float:
 # that a chain with no cache levels reproduces the seed model bit-for-bit.
 # ---------------------------------------------------------------------------
 
-def _spill_classes(p: GemmProblem, t: TileConfig
+def _spill_classes(p: GemmProblem, t: TileConfig, revisit: bool = True
                    ) -> List[Tuple[float, float]]:
     """Re-read classes not absorbed by the revisit skip, per batch element.
 
@@ -332,8 +399,12 @@ def _spill_classes(p: GemmProblem, t: TileConfig
       B panel); B re-reads within a group see the one-tile window; B
       re-reads across groups see a full group-sweep window.
 
-    Classes the Pallas revisit model already skips (Tk == 1 cases priced by
+    With ``revisit=True`` (single-core chains) the classes the Pallas
+    revisit model already skips (Tk == 1 cases priced by
     ``revisit_fractions``) are omitted — those fetches never leave staging.
+    On multi-core chains (``revisit=False``) no fetch is skipped, so those
+    classes join the recurrence with their one-tile windows (they become
+    near-certain cache hits instead of free revisits).
     """
     Tm, Tn, Tk = grid_shape(p, t)
     bi = DTYPE_BYTES[p.in_dtype]
@@ -341,7 +412,7 @@ def _spill_classes(p: GemmProblem, t: TileConfig
     tile_window = (t.bm + t.bn) * p.K * bi
     out: List[Tuple[float, float]] = []
     if g <= 1:
-        if Tn > 1 and Tk != 1:
+        if Tn > 1 and (Tk != 1 or not revisit):
             out.append(((Tn - 1) * p.M * p.K * bi, tile_window))
         if Tm > 1:
             out.append(((Tm - 1) * p.K * p.N * bi,
@@ -350,7 +421,7 @@ def _spill_classes(p: GemmProblem, t: TileConfig
         if Tn > 1:
             out.append(((Tn - 1) * p.M * p.K * bi,
                         (g * t.bm + t.bn) * p.K * bi))
-        if Tk != 1:
+        if Tk != 1 or not revisit:
             out.append(((g - 1) / g * Tm * p.K * p.N * bi, tile_window))
         if Tm > g:
             out.append(((Tm / g - 1) * p.K * p.N * bi,
@@ -358,35 +429,94 @@ def _spill_classes(p: GemmProblem, t: TileConfig
     return out
 
 
-def _serving_cache(window: float, cache_levels: Sequence[MemoryLevel]
+def _window_scale(hw: HardwareSpec, lvl: MemoryLevel) -> float:
+    """Fraction of the chip-wide reuse-window byte stream a cache *instance*
+    at this level observes.  Work is scheduled partition-blocked (units
+    round-robin over cores, cores blocked per partition), so a
+    partition-scoped cache (the MI300X per-XCD L2) sees only its
+    1/partitions share of the stream — per-partition L2 scoping.  On a
+    single-core chain everything flows through one instance: scale 1.0,
+    preserving the PR 2 recurrence bit-for-bit."""
+    if hw.total_cores() == 1:
+        return 1.0
+    if lvl.scope == "partition":
+        return 1.0 / hw.partitions
+    return 1.0
+
+
+def _serving_cache(window: float, hw: HardwareSpec
                    ) -> Optional[MemoryLevel]:
-    """Nearest cache level whose budget covers the reuse window, else None
-    (the re-read spills all the way to backing memory)."""
-    for lvl in reversed(cache_levels):
-        if window <= lvl.budget():
+    """Nearest cache level whose budget covers the (scope-scaled) reuse
+    window, else None (the re-read spills all the way to backing memory)."""
+    for lvl in reversed(hw.cache_levels):
+        if window * _window_scale(hw, lvl) <= lvl.budget():
             return lvl
     return None
 
 
+def schedule_extra_classes(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+                           ) -> List[Tuple[float, float]]:
+    """Partial-accumulator traffic the schedule adds on multi-core chains,
+    as ``(bytes, window)`` pairs for the cache recurrence (whole GEMM,
+    batch included).  Empty on single-core chains — split-K is in-kernel
+    there and moves no partials.
+
+    * ``data_parallel`` with split_k > 1: a tile's k-shards run on
+      different cores, so each shard writes a full f32 block partial and
+      the combine re-reads all of them — 2 x split_k x padded-output
+      block-bytes.  The combine runs as soon as a tile's last shard lands,
+      so the footprint is the tile's split_k partials.
+    * ``stream_k``: only tiles split across a strip boundary pay a partial
+      write + read.  Strips are ``ceil(steps / cores)`` k-steps; a boundary
+      at step ``m*q`` splits a tile iff it is not tile-aligned
+      (``m*q % Tk != 0``) — counted exactly via gcd.
+    """
+    C = hw.total_cores()
+    if C == 1:
+        return []
+    Tm, Tn, Tk = grid_shape(p, t)
+    block_acc = t.bm * t.bn * ACC_BYTES
+    if t.schedule == "stream_k":
+        steps = Tm * Tn * Tk * p.batch
+        q = cdiv(steps, C)                       # strip length (k-steps)
+        nb = cdiv(steps, q) - 1                  # interior strip boundaries
+        aligned = nb // (Tk // math.gcd(q, Tk))  # boundaries at tile edges
+        n_split = nb - aligned
+        if n_split <= 0:
+            return []
+        return [(2.0 * n_split * block_acc, float(block_acc))]
+    if t.split_k > 1:
+        tiles = Tm * Tn * p.batch
+        return [(2.0 * t.split_k * tiles * block_acc,
+                 float(t.split_k * block_acc))]
+    return []
+
+
 def level_traffic(p: GemmProblem, t: TileConfig, hw: HardwareSpec
                   ) -> Dict[str, float]:
-    """Bytes served from each memory level (backing + caches), whole GEMM.
+    """Bytes served from each memory level (backing + caches), whole GEMM:
+    the all-HBM base (revisit model on single-core chains) re-routed by the
+    reuse/footprint recurrence, plus the schedule's partial/fixup traffic.
 
     Output writes and epilogue operand reads always go to backing memory
     (write-through; compulsory).  On a 1-level chain the single entry equals
     ``hbm_traffic`` exactly.
     """
+    revisit = hw.total_cores() == 1
     served = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
-    base = hbm_traffic(p, t)
+    base = hbm_traffic(p, t, revisit=revisit)
     served[hw.backing.name] = base
     if hw.cache_levels:
-        for bytes_, window in _spill_classes(p, t):
-            lvl = _serving_cache(window, hw.cache_levels)
+        for bytes_, window in _spill_classes(p, t, revisit):
+            lvl = _serving_cache(window, hw)
             if lvl is not None:
                 b = bytes_ * p.batch
                 served[lvl.name] += b
                 served[hw.backing.name] -= b
         served[hw.backing.name] = max(served[hw.backing.name], 0.0)
+    for bytes_, window in schedule_extra_classes(p, t, hw):
+        lvl = _serving_cache(window, hw) if hw.cache_levels else None
+        served[lvl.name if lvl is not None else hw.backing.name] += bytes_
     return served
 
 
@@ -423,9 +553,18 @@ def epilogue_unfused_extra_bytes(p: GemmProblem) -> float:
     return extra
 
 
-def reuse_fraction(p: GemmProblem, t: TileConfig) -> float:
-    """Paper Alg. 5's hit rate h in [0,1]: 1 - compulsory/actual traffic."""
-    actual = hbm_traffic(p, t)
+def reuse_fraction(p: GemmProblem, t: TileConfig,
+                   hw: Optional[HardwareSpec] = None) -> float:
+    """Paper Alg. 5's hit rate h in [0,1]: 1 - compulsory/actual traffic.
+
+    Pass ``hw`` to price the traffic the selector actually used for that
+    chain — the revisit skip is inert on multi-core topologies, and the
+    schedule's partial/fixup bytes count as traffic there."""
+    if hw is None or hw.total_cores() == 1:
+        actual = hbm_traffic(p, t)
+    else:
+        actual = hbm_traffic(p, t, revisit=False) \
+            + sum(b for b, _ in schedule_extra_classes(p, t, hw))
     return max(0.0, min(1.0, 1.0 - p.min_bytes / actual)) if actual else 0.0
 
 
@@ -463,8 +602,12 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     hbm_s = level_s[hw.backing.name]
     mem_s = max(level_s.values())
 
-    compute_side = max(mxu_s, vmem_s)
-    memory_side = mem_s + issue_s
+    # Alg. 4 occupancy stage: per-core terms (MXU, staging port, DMA issue)
+    # pay the tail-wave quantization factor; chip-shared memory ports do
+    # not.  occ == 1.0 exactly on single-core chains (PR 2 parity).
+    units, waves, occ = wave_model(p, t, hw)
+    compute_side = max(mxu_s, vmem_s) * occ
+    memory_side = mem_s + issue_s * occ
     l_iter = max(compute_side, memory_side)           # software pipeline
 
     # Prologue: first block fetch cannot be hidden (paper Alg. 8 L_prologue);
@@ -486,10 +629,10 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
 
     level_seconds = {name: steps * s for name, s in level_s.items()}
     terms = {
-        "mxu_compute": steps * mxu_s,
-        "vmem_bandwidth": steps * vmem_s,
+        "mxu_compute": steps * mxu_s * occ,
+        "vmem_bandwidth": steps * vmem_s * occ,
         "hbm_bandwidth": steps * hbm_s,
-        "dma_issue": steps * issue_s,
+        "dma_issue": steps * issue_s * occ,
         "pipeline_fill": fill_drain,
     }
     for lvl in hw.cache_levels:
@@ -508,6 +651,9 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
         bottleneck=bottleneck,
         level_bytes=served,
         level_seconds=level_seconds,
+        units=units,
+        waves=waves,
+        occupancy=units / (waves * hw.total_cores()),
     )
 
 
@@ -541,8 +687,10 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     vmem_s = ((bm * bk + bk * bn) * bi + 2.0 * ACC_BYTES * bm * bn
               + e_vmem) / hw.vmem_bandwidth
 
-    # revisit fractions (inlined)
-    if Tk != 1:
+    # revisit fractions (inlined; inert on multi-core chains — consecutive
+    # grid steps run on different cores, nothing persists in staging)
+    revisit = hw.total_cores() == 1
+    if Tk != 1 or not revisit:
         a_skip = b_skip = 0.0
     elif t.group_m <= 1:
         a_skip, b_skip = ((Tn - 1) / Tn if Tn else 0.0), 0.0
@@ -555,52 +703,104 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
+    extra = schedule_extra_classes(p, t, hw)
     if hw.cache_levels:
         # reuse/footprint recurrence: cache-served re-reads leave HBM.
         absorbed: Dict[str, float] = {}
         hbm_bytes = traffic
-        for bytes_, window in _spill_classes(p, t):
-            lvl = _serving_cache(window, hw.cache_levels)
+        for bytes_, window in _spill_classes(p, t, revisit):
+            lvl = _serving_cache(window, hw)
             if lvl is not None:
                 served = bytes_ * p.batch
                 absorbed[lvl.name] = absorbed.get(lvl.name, 0.0) + served
                 hbm_bytes -= served
         hbm_bytes = max(hbm_bytes, 0.0)
+        for bytes_, window in extra:
+            lvl = _serving_cache(window, hw)
+            if lvl is not None:
+                absorbed[lvl.name] = absorbed.get(lvl.name, 0.0) + bytes_
+            else:
+                hbm_bytes += bytes_
         mem_s = hbm_bytes / hw.hbm_bandwidth / steps
         through = hbm_bytes
         for lvl in hw.cache_levels:
             through += absorbed.get(lvl.name, 0.0)
             mem_s = max(mem_s, through / lvl.bandwidth / steps)
     else:
+        traffic += sum(b for b, _ in extra)
         mem_s = traffic / hw.hbm_bandwidth / steps
-    l_iter = max(max(mxu_s, vmem_s), mem_s + hw.dma_fixed)
+    _, _, occ = wave_model(p, t, hw)
+    l_iter = max(max(mxu_s, vmem_s) * occ, mem_s + hw.dma_fixed * occ)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter
+
+
+def _schedule_extra_arrays(p: GemmProblem, hw: HardwareSpec,
+                           Tm: np.ndarray, Tn: np.ndarray, Tk: np.ndarray,
+                           bm: np.ndarray, bn: np.ndarray, sk: np.ndarray,
+                           sched: np.ndarray
+                           ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Vectorized ``schedule_extra_classes``: (bytes, window) column pairs
+    for the data-parallel split-K combine and the stream-K strip fixup.
+    Empty on single-core chains."""
+    C = hw.total_cores()
+    if C == 1:
+        return []
+    block_acc = (bm * bn * ACC_BYTES).astype(np.float64)
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    stream = sched == SCHEDULES.index("stream_k")
+    if stream.any():
+        steps_i = Tm * Tn * Tk * p.batch
+        q = -(-steps_i // C)
+        nb = -(-steps_i // q) - 1
+        aligned = nb // (Tk // np.gcd(q, Tk))
+        n_split = np.where(stream, nb - aligned, 0)
+        out.append((2.0 * n_split * block_acc, block_acc))
+    comb = (~stream) & (sk > 1)
+    if comb.any():
+        tiles = Tm * Tn * p.batch
+        out.append((np.where(comb, 2.0 * sk * tiles * block_acc, 0.0),
+                    sk * block_acc))
+    return out
 
 
 def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
                                traffic: np.ndarray, Tm: np.ndarray,
                                Tn: np.ndarray, Tk: np.ndarray,
                                bm: np.ndarray, bn: np.ndarray,
-                               gm: np.ndarray, steps: np.ndarray
+                               gm: np.ndarray, steps: np.ndarray,
+                               sk: Optional[np.ndarray] = None,
+                               sched: Optional[np.ndarray] = None
                                ) -> np.ndarray:
     """Vectorized memory-side step seconds over candidate column arrays:
     the per-level reuse/footprint recurrence (``_spill_classes`` +
-    ``_serving_cache``) in one numpy pass, shared by
-    ``score_candidate_arrays`` and ``selector.select_fast``.
+    ``_serving_cache``) plus the schedule's partial/fixup traffic, in one
+    numpy pass — shared by ``score_candidate_arrays`` and
+    ``selector.select_fast``.
 
-    ``traffic`` is the all-HBM base (revisit model applied).  Chains with no
+    ``traffic`` is the all-HBM base (revisit model applied by the caller —
+    inert on multi-core chains).  ``sk``/``sched`` feed the combine/fixup
+    classes; omitted they default to sk=1 data_parallel.  Chains with no
     cache level return the seed's exact expression — bit-for-bit parity on
     1-level topologies."""
+    if sk is None:
+        sk = np.ones_like(Tm)
+    if sched is None:
+        sched = np.zeros_like(Tm)
+    extra = _schedule_extra_arrays(p, hw, Tm, Tn, Tk, bm, bn, sk, sched)
     if not hw.cache_levels:
+        if extra:
+            traffic = traffic + sum(b for b, _ in extra)
         return traffic / hw.hbm_bandwidth / steps
+    revisit = hw.total_cores() == 1
     bi = DTYPE_BYTES[p.in_dtype]
     M, N, K = p.M, p.N, p.K
     g = np.minimum(np.maximum(gm, 1), Tm).astype(np.float64)
     gle1 = g <= 1          # clamped, matching _spill_classes' g = min(gm, Tm)
     ggt1 = ~gle1
-    tk1 = Tk == 1
+    # Revisit only suppresses re-read classes on single-core chains.
+    tk1 = (Tk == 1) if revisit else np.zeros(np.shape(Tk), bool)
     # Re-read classes: bytes (per batch element) + reuse-window footprints,
     # mirroring _spill_classes.  Revisit-skipped classes zero out.
     a_bytes = np.where(gle1 & tk1, 0.0, (Tn - 1) * float(M * K * bi))
@@ -616,22 +816,47 @@ def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
                         0.0)
     b2_win = (g * bm * K + float(K * N)) * bi
     caches = hw.cache_levels
+    scales = [_window_scale(hw, lvl) for lvl in caches]
     absorbed: List = [0.0] * len(caches)
-    for bytes_, win in ((a_bytes, a_win), (b1_bytes, b1_win),
-                        (b2_bytes, b2_win)):
-        b = bytes_ * p.batch
+    # Spill classes: cache-served re-reads LEAVE the all-HBM base.
+    for b, win in ((a_bytes * p.batch, a_win), (b1_bytes * p.batch, b1_win),
+                   (b2_bytes * p.batch, b2_win)):
         assigned = np.zeros(np.shape(win), bool)
         for li in range(len(caches) - 1, -1, -1):      # nearest cache first
-            fit = ~assigned & (win <= caches[li].budget())
+            fit = ~assigned & (win * scales[li] <= caches[li].budget())
             absorbed[li] = absorbed[li] + np.where(fit, b, 0.0)
             assigned |= fit
-    hbm_bytes = np.maximum(traffic - sum(absorbed), 0.0)
+    hbm_bytes = np.maximum(traffic - sum(ab for ab in absorbed), 0.0)
+    # Schedule extras were never in the base: ADD them at the serving level
+    # (or to HBM when no cache window fits).
+    for b, win in extra:
+        assigned = np.zeros(np.shape(win), bool)
+        for li in range(len(caches) - 1, -1, -1):
+            fit = ~assigned & (win * scales[li] <= caches[li].budget())
+            absorbed[li] = absorbed[li] + np.where(fit, b, 0.0)
+            assigned |= fit
+        hbm_bytes = hbm_bytes + np.where(assigned, 0.0, b)
     mem = hbm_bytes / hw.hbm_bandwidth
     through = hbm_bytes
     for li, lvl in enumerate(caches):
         through = through + absorbed[li]
         mem = np.maximum(mem, through / lvl.bandwidth)
     return mem / steps
+
+
+def occupancy_arrays(p: GemmProblem, hw: HardwareSpec, Tm: np.ndarray,
+                     Tn: np.ndarray, sk: np.ndarray,
+                     sched: np.ndarray, steps_i: np.ndarray):
+    """Vectorized ``wave_model`` quantization factor (waves*cores/units >= 1)
+    over candidate columns.  Returns the scalar 1.0 on single-core chains so
+    multiplying by it is bit-exact (PR 2 parity)."""
+    C = hw.total_cores()
+    if C == 1:
+        return 1.0
+    stream = sched == SCHEDULES.index("stream_k")
+    units = np.where(stream, steps_i, Tm * Tn * p.batch * sk)
+    waves = -(-units // C)
+    return waves * C / units
 
 
 def score_candidates(p: GemmProblem, tiles: Sequence[TileConfig],
@@ -647,20 +872,27 @@ def score_candidates(p: GemmProblem, tiles: Sequence[TileConfig],
     bk = np.fromiter((t.bk for t in tiles), np.int64, n)
     sk = np.fromiter((t.split_k for t in tiles), np.int64, n)
     gm = np.fromiter((t.group_m for t in tiles), np.int64, n)
-    return score_candidate_arrays(p, bm, bn, bk, sk, gm, hw)
+    sched = np.fromiter((SCHEDULES.index(t.schedule) for t in tiles),
+                        np.int64, n)
+    return score_candidate_arrays(p, bm, bn, bk, sk, gm, hw, sched=sched)
 
 
 def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
                            bk: np.ndarray, sk: np.ndarray, gm: np.ndarray,
-                           hw: HardwareSpec) -> np.ndarray:
+                           hw: HardwareSpec,
+                           sched: Optional[np.ndarray] = None) -> np.ndarray:
     """``score_candidates`` on raw int64 column arrays (no TileConfig
     objects) — the selector's fully-vectorized cold path feeds the enumerated
-    candidate columns straight in."""
+    candidate columns straight in.  ``sched`` holds ``SCHEDULES`` indices
+    (omitted: all data_parallel)."""
     Tm = -(-p.M // bm)
     Tn = -(-p.N // bn)
     k_per_split = -(-p.K // sk)
     Tk = -(-k_per_split // bk) * sk
-    steps = (Tm * Tn * Tk * p.batch).astype(np.float64)
+    if sched is None:
+        sched = np.zeros_like(bm)
+    steps_i = Tm * Tn * Tk * p.batch
+    steps = steps_i.astype(np.float64)
 
     mm, mn, mk = hw.mxu_shape
     n_atoms = (-(-bm // mm)) * (-(-bn // mn)) * (-(-bk // mk))
@@ -675,11 +907,13 @@ def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
               + e_vmem) / hw.vmem_bandwidth
 
     # revisit fractions (vectorized): A skipped on n-advance (ungrouped),
-    # B skipped on m-advance within a group (grouped), both need Tk == 1.
-    a_skip = np.where((Tk == 1) & (gm <= 1) & (Tn > 0),
+    # B skipped on m-advance within a group (grouped), both need Tk == 1
+    # AND a single-core chain (multi-core: nothing persists in staging).
+    rev = hw.total_cores() == 1
+    a_skip = np.where(rev & (Tk == 1) & (gm <= 1) & (Tn > 0),
                       (Tn - 1) / np.maximum(Tn, 1), 0.0)
     g = np.minimum(gm, Tm)
-    b_skip = np.where((Tk == 1) & (gm > 1),
+    b_skip = np.where(rev & (Tk == 1) & (gm > 1),
                       (g - 1) / np.maximum(g, 1), 0.0)
     a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
     b_bytes = Tm * (p.K * p.N) * bi * (1.0 - b_skip)
@@ -688,8 +922,10 @@ def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
     mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
-                                       bm, bn, gm, steps)
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), mem_s + hw.dma_fixed)
+                                       bm, bn, gm, steps, sk=sk, sched=sched)
+    occ = occupancy_arrays(p, hw, Tm, Tn, sk, sched, steps_i)
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
+                        mem_s + hw.dma_fixed * occ)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter

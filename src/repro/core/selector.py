@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.hardware import TPU_V5E
-from repro.core.topology import HardwareSpec
+from repro.core.topology import SCHEDULES, HardwareSpec
 from repro.core.latency import (
     EPILOGUE_NONE,
     Epilogue,
@@ -37,6 +37,7 @@ from repro.core.latency import (
     gemm_latency,
     grid_shape,
     memory_step_seconds_arrays,
+    occupancy_arrays,
     round_up,
     score_candidate,
     score_candidates,
@@ -96,19 +97,25 @@ def candidate_tiles(
       4. model-equivalence pruning — on 1-level chains group_m only changes
          behaviour when the revisit model can trigger (Tk == 1); on
          multi-level chains grouped swizzle is priced via L2 residency, so
-         it stays in the space for any Tk.  split_k only when the grid is
-         small enough for fill/drain to matter (deterministic, part of the
-         model, keeps P near the paper's 50-150).
+         it stays in the space for any Tk.  split_k only while the chip is
+         under-occupied: the wave model prices sk>1 as pure combine cost
+         once base tiles exceed ~2x total cores (on single-core chains the
+         seed's fill/drain threshold of 16), keeping P near the paper's
+         50-150.  stream_k enters only on multi-core chains with sk == 1
+         (it subsumes split-K; on one core it is the identical twin of the
+         sequential grid).
 
-    NB: with split-K now *in-kernel* (sequential grid, one flush, no HBM
-    partials) the model scores sk>1 as never better than its sk=1 twin —
-    the GPU occupancy rationale has no TPU analogue — so selection always
-    returns sk=1; split-K stays in the space for explicitly-passed configs
-    and future multi-core shard scheduling (DESIGN.md §3).
+    NB: on a single-core chain (TPU) the in-kernel split-K moves no HBM
+    partials and the model scores sk>1 as never better than its sk=1 twin —
+    selection returns sk=1 there; on multi-core chains the Alg. 4 wave
+    model restores split-K's occupancy rationale and it competes on merit
+    (DESIGN.md §2-§3).
     """
     sub = hw.sublane(p.in_dtype)
     lane = hw.lane_width
     priced_grouping = bool(hw.cache_levels)
+    n_cores = hw.total_cores()
+    sk_gate = 16 if n_cores == 1 else max(16, 2 * n_cores)
 
     def useful(menu: Sequence[int], extent: int, align: int) -> List[int]:
         padded = round_up(extent, align)
@@ -128,17 +135,21 @@ def candidate_tiles(
         base_tiles = cdiv(p.M, bm) * cdiv(p.N, bn) * p.batch
         tk = cdiv(p.K, bk)
         for sk in sks:
-            if sk > 1 and (cdiv(p.K, sk) < bk or base_tiles >= 16):
+            if sk > 1 and (cdiv(p.K, sk) < bk or base_tiles >= sk_gate):
                 continue                  # split finer than a block / no need
             for gm in gms:
                 if gm > 1 and cdiv(p.M, bm) < 2:
                     continue              # nothing to group
                 if gm > 1 and tk != 1 and not priced_grouping:
                     continue              # revisit can't trigger -> identical
-                t = TileConfig(bm=bm, bn=bn, bk=bk, split_k=sk, group_m=gm)
-                if not fits_placement(t, p.in_dtype, hw):
-                    continue
-                out.append(t)
+                for sched in hw.schedule_menu:
+                    if sched == "stream_k" and (n_cores == 1 or sk > 1):
+                        continue          # identical twin / subsumed
+                    t = TileConfig(bm=bm, bn=bn, bk=bk, split_k=sk,
+                                   group_m=gm, schedule=sched)
+                    if not fits_placement(t, p.in_dtype, hw):
+                        continue
+                    out.append(t)
     return out
 
 
@@ -151,24 +162,29 @@ def _grid_identity(hw: HardwareSpec) -> Tuple:
     reusing a stale candidate filter; MemoryLevel is frozen so the levels
     tuple hashes."""
     return (hw.name, hw.levels, hw.bm_menu, hw.bn_menu, hw.bk_menu,
-            hw.split_k_menu, hw.group_m_menu, hw.pipeline_depth,
+            hw.split_k_menu, hw.group_m_menu, hw.schedule_menu,
+            hw.partitions, hw.core_count, hw.pipeline_depth,
             hw.lane_width, hw.sublane_f32)
 
 
 def _menu_grid(hw: HardwareSpec, in_dtype: str) -> Tuple[np.ndarray, ...]:
     """Static part of the candidate space for (hardware, dtype): the full
-    lexicographic (bm, bn, bk, sk, gm) menu grid plus the problem-independent
-    alignment + per-level-capacity keep-mask.  Cached — cold selection only
-    pays for the problem-dependent masks and the scoring pass."""
+    lexicographic (bm, bn, bk, sk, gm, sched) menu grid plus the
+    problem-independent alignment + per-level-capacity + schedule keep-mask.
+    Cached — cold selection only pays for the problem-dependent masks and
+    the scoring pass."""
     key = (_grid_identity(hw), in_dtype)
     hit = _GRID_CACHE.get(key)
     if hit is not None:
         return hit
-    bm, bn, bk, sk, gm = (g.ravel() for g in np.meshgrid(
+    sched_codes = np.asarray([SCHEDULES.index(s) for s in hw.schedule_menu],
+                             np.int64)
+    bm, bn, bk, sk, gm, sched = (g.ravel() for g in np.meshgrid(
         np.asarray(hw.bm_menu, np.int64), np.asarray(hw.bn_menu, np.int64),
         np.asarray(hw.bk_menu, np.int64),
         np.asarray(hw.split_k_menu, np.int64),
-        np.asarray(hw.group_m_menu, np.int64), indexing="ij"))
+        np.asarray(hw.group_m_menu, np.int64),
+        sched_codes, indexing="ij"))
     sub, lane = hw.sublane(in_dtype), hw.lane_width
     bi = DTYPE_BYTES[in_dtype]
     static_keep = (bm % sub == 0) & (bn % lane == 0) & (bk % lane == 0)
@@ -177,12 +193,16 @@ def _menu_grid(hw: HardwareSpec, in_dtype: str) -> Tuple[np.ndarray, ...]:
     working_set = hw.pipeline_depth * (bm * bk + bk * bn) * bi + acc
     for lvl in hw.placement_levels():
         static_keep &= working_set <= lvl.budget()
+    # stream_k: multi-core chains only, and only with sk == 1 (it subsumes
+    # split-K); on one core it is the identical twin of the sequential grid.
+    stream = sched == SCHEDULES.index("stream_k")
+    static_keep &= ~(stream & ((sk > 1) | (hw.total_cores() == 1)))
     # All menu entries are powers of two: ceil-divs become shifts, and the
     # split-K / grouping gate masks are grid-static (int64 floordiv is the
     # single most expensive numpy op on the cold path).
     shifts = tuple(np.log2(c).astype(np.int64) for c in (bm, bn, bk, sk))
     masks = (sk > 1, gm > 1, gm <= 1)
-    out = (bm, bn, bk, sk, gm, static_keep, shifts, masks)
+    out = (bm, bn, bk, sk, gm, sched, static_keep, shifts, masks)
     _GRID_CACHE[key] = out
     return out
 
@@ -199,11 +219,13 @@ def _keep_mask(p: GemmProblem, hw: HardwareSpec, allow_split_k: bool,
                allow_grouping: bool) -> np.ndarray:
     """Problem-dependent candidate filter over the full menu grid —
     candidate_tiles' usefulness / split-K / grouping rules, vectorized."""
-    (bm, bn, bk, sk, gm, static_keep,
+    (bm, bn, bk, sk, gm, sched, static_keep,
      (bm_sh, bn_sh, bk_sh, sk_sh), (sk_gt1, gm_gt1, _)) = \
         _menu_grid(hw, p.in_dtype)
     sub = hw.sublane(p.in_dtype)
     lane = hw.lane_width
+    n_cores = hw.total_cores()
+    sk_gate = 16 if n_cores == 1 else max(16, 2 * n_cores)
 
     keep = static_keep \
         & (bm <= _menu_cut(hw.bm_menu, p.M, sub)) \
@@ -217,7 +239,7 @@ def _keep_mask(p: GemmProblem, hw: HardwareSpec, allow_split_k: bool,
     Tm = (p.M - 1 + bm) >> bm_sh                       # cdiv via shift
     Tn = (p.N - 1 + bn) >> bn_sh
     keep = keep & ~(sk_gt1 & ((((p.K - 1 + sk) >> sk_sh) < bk)
-                              | (Tm * Tn * p.batch >= 16)))
+                              | (Tm * Tn * p.batch >= sk_gate)))
     if hw.cache_levels:
         # grouped swizzle is priced (L2 residency) -> keep for any Tk
         keep = keep & ~(gm_gt1 & (Tm < 2))
@@ -235,12 +257,13 @@ def candidate_arrays(
     allow_grouping: bool = True,
 ) -> Tuple[np.ndarray, ...]:
     """``candidate_tiles`` fully vectorized: returns (bm, bn, bk, split_k,
-    group_m) int64 column arrays with the SAME filters and the SAME
-    enumeration order, without materializing TileConfig objects — the cold
-    selection path builds only the winning config."""
-    bm, bn, bk, sk, gm = _menu_grid(hw, p.in_dtype)[:5]
+    group_m, schedule) int64 column arrays (schedule as ``SCHEDULES``
+    indices) with the SAME filters and the SAME enumeration order, without
+    materializing TileConfig objects — the cold selection path builds only
+    the winning config."""
+    bm, bn, bk, sk, gm, sched = _menu_grid(hw, p.in_dtype)[:6]
     keep = _keep_mask(p, hw, allow_split_k, allow_grouping)
-    return bm[keep], bn[keep], bk[keep], sk[keep], gm[keep]
+    return bm[keep], bn[keep], bk[keep], sk[keep], gm[keep], sched[keep]
 
 
 _STATIC_TERMS: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
@@ -286,7 +309,7 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
     per-(hw, dtypes) terms and shift-based ceil-divs can be cached — a model
     change must touch all three; ``tests/test_selector.py`` pins their
     pairwise parity."""
-    (bm, bn, bk, sk, gm, _,
+    (bm, bn, bk, sk, gm, sched, _,
      (bm_sh, bn_sh, bk_sh, sk_sh), (_, gm_gt1, gm_le1)) = \
         _menu_grid(hw, p.in_dtype)
     mxu_s, vmem_base_s, bmn, fill_drain, vols = _static_score_terms(
@@ -315,7 +338,8 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
                          + (ep.n_mn_operands * p.M * p.N
                             + int(ep.bias) * p.N) * bi)
 
-    tk1 = Tk == 1
+    rev = hw.total_cores() == 1
+    tk1 = (Tk == 1) if rev else np.zeros(np.shape(Tk), bool)
     a_skip = (tk1 & gm_le1) * ((Tn - 1) / Tn)
     g = np.minimum(gm, Tm)
     b_skip = (tk1 & gm_gt1) * ((g - 1) / g)
@@ -324,13 +348,16 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
     traffic = p.batch * (a_bytes + b_bytes + ce_bytes)
 
     mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
-                                       bm, bn, gm, steps)
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s), mem_s + hw.dma_fixed)
+                                       bm, bn, gm, steps, sk=sk, sched=sched)
+    occ = occupancy_arrays(p, hw, Tm, Tn, sk, sched, steps)
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
+                        mem_s + hw.dma_fixed * occ)
     scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
     idx = np.flatnonzero(scores <= scores.min() + 1e-15)
     i = int(idx[np.argmax(vols[idx])])
     return TileConfig(bm=int(bm[i]), bn=int(bn[i]), bk=int(bk[i]),
-                      split_k=int(sk[i]), group_m=int(gm[i])), n_cands
+                      split_k=int(sk[i]), group_m=int(gm[i]),
+                      schedule=SCHEDULES[int(sched[i])]), n_cands
 
 
 def rank_candidates(
@@ -345,7 +372,8 @@ def rank_candidates(
     scored.sort(key=lambda it: (it[1].total,
                                 -(it[0].bm * it[0].bn * it[0].bk),
                                 it[0].bm, it[0].bn, it[0].bk,
-                                it[0].split_k, it[0].group_m))
+                                it[0].split_k, it[0].group_m,
+                                it[0].schedule))
     return scored
 
 
@@ -378,7 +406,8 @@ def _topo_fingerprint(hw: HardwareSpec) -> str:
     the old selections instead of warm-starting from them."""
     ident = (hw.levels, hw.mxu_shape, tuple(sorted(hw.peak_flops.items())),
              hw.bm_menu, hw.bn_menu, hw.bk_menu, hw.split_k_menu,
-             hw.group_m_menu, hw.dma_fixed, hw.kernel_launch,
+             hw.group_m_menu, hw.schedule_menu, hw.partitions,
+             hw.core_count, hw.dma_fixed, hw.kernel_launch,
              hw.pipeline_depth, hw.lane_width, hw.sublane_f32)
     return hashlib.md5(repr(ident).encode()).hexdigest()[:16]
 
@@ -458,7 +487,8 @@ def _disk_record(key: Tuple, sel: Selection, hw: HardwareSpec) -> None:
     c = sel.config
     _disk_table[_key_str(key)] = {
         "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
-                   "split_k": c.split_k, "group_m": c.group_m},
+                   "split_k": c.split_k, "group_m": c.group_m,
+                   "schedule": c.schedule},
         "n_candidates": sel.n_candidates,
         "topo": _topo_fingerprint(hw),
     }

@@ -22,7 +22,17 @@ the machine at a strictly finer granularity than the closed-form model in
   operand panel's *measured* reuse distance (bytes streamed since its last
   use, an LRU stack-distance proxy) decides which cache level serves it —
   event-by-event, not the latency model's closed-form windows — and the
-  fetch is timed at that level's bandwidth.
+  fetch is timed at that level's bandwidth,
+* multi-core topologies (``Topology.total_cores() > 1``): work units are
+  scheduled round-robin over the cores — one (tile, k-shard) per unit under
+  ``data_parallel``, contiguous k-step strips under ``stream_k`` — so the
+  measured wave count (max units on any core) cross-checks the closed-form
+  Alg. 4 wave model; reuse distances are measured against a chip-wide byte
+  clock for device-scoped caches and per-partition clocks for
+  partition-scoped ones (cores are blocked per partition within a wave);
+  data-parallel split-K shards write block partials that a per-tile combine
+  re-reads, and stream-K strips pay a partial fixup at every strip boundary
+  that is not tile-aligned — mirroring the schedules the model prices.
 
 It shares nothing with ``latency.py`` but the Topology constants.
 
@@ -49,11 +59,18 @@ _EXPLICIT = 3  # pipeline steps simulated exactly at each tile start
 class SimResult:
     time: float          # seconds, end-to-end kernel latency
     hbm_bytes: float     # bytes moved, all levels + writebacks (legacy view)
-    mxu_busy: float      # seconds the MXU was computing
+    mxu_busy: float      # seconds the MXU was computing (chip-equivalent)
     steps: int
     # Bytes served from each memory level (backing + caches).  On a 1-level
     # chain the single entry equals hbm_bytes.
     level_bytes: Mapping[str, float] = field(default_factory=dict)
+    # Occupancy cross-check (Alg. 4): schedulable work units, the measured
+    # wave count (max units landed on any core by the round-robin
+    # scheduler), and the core count they were spread over.  Single-core
+    # chains report units == waves, cores == 1.
+    units: int = 0
+    waves: int = 0
+    cores: int = 1
 
     @property
     def tflops(self) -> float:          # filled by caller via problem
@@ -77,6 +94,16 @@ def _tile_order(Tm: int, Tn: int, group_m: int) -> Iterator[Tuple[int, int]]:
 
 
 def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
+    """Dispatch: the event-level single-core pipeline (bit-identical to the
+    PR 2 simulator) on 1-core chains; the round-robin multi-core scheduler
+    otherwise."""
+    if hw.total_cores() > 1:
+        return _simulate_multicore(p, t, hw)
+    return _simulate_single_core(p, t, hw)
+
+
+def _simulate_single_core(p: GemmProblem, t: TileConfig,
+                          hw: HardwareSpec) -> SimResult:
     bi = DTYPE_BYTES[p.in_dtype]
     bo = DTYPE_BYTES[p.out_dtype]
     mm, mn, mk = hw.mxu_shape
@@ -236,9 +263,217 @@ def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
             write_back(em * en * bo + e_fetch)
 
     end = max(comp_cursor, dma_cursor)
+    units = Tm * Tn * p.batch * t.split_k
     return SimResult(time=end, hbm_bytes=total_bytes,
                      mxu_busy=mxu_busy, steps=n_steps,
-                     level_bytes=level_bytes)
+                     level_bytes=level_bytes,
+                     units=units, waves=units, cores=1)
+
+
+def _simulate_multicore(p: GemmProblem, t: TileConfig,
+                        hw: HardwareSpec) -> SimResult:
+    """Round-robin multi-core scheduler over the chip's cores.
+
+    Per-core rates are the chip aggregates shared evenly (MXU: peak/C,
+    ports: bandwidth/C — contention is static, a deliberate simplification
+    the closed-form model shares).  Reuse distances are measured in bytes
+    against a chip-wide clock for device-scoped caches and per-partition
+    clocks for partition-scoped ones; cores are blocked per partition
+    (cores [p*core_count, (p+1)*core_count) form partition p), so within a
+    wave consecutive units stream through the same partition cache.
+
+    Schedules: ``data_parallel`` — one unit per (tile, k-shard); shards of
+    a split tile land on different cores, write a full-block f32 partial
+    each, and the tile's last shard runs the combine (reads all split_k
+    partials).  ``stream_k`` — the flattened k-step space is cut into
+    ``ceil(steps / C)``-step strips, one per core; every strip boundary not
+    on a tile edge costs one partial write + read (fixup).  Partials are
+    consumed as soon as they are complete, so their footprint is
+    deterministic: the serving level is the nearest cache whose budget
+    covers it at the cache's partition share — the one placement decision
+    shared with the model's formulation, since a never-idle buffer has no
+    measurable reuse distance.
+    """
+    bi = DTYPE_BYTES[p.in_dtype]
+    bo = DTYPE_BYTES[p.out_dtype]
+    mm, mn, mk = hw.mxu_shape
+    C = hw.total_cores()
+
+    k_extent = cdiv(p.K, t.split_k)           # k span per split
+    Tm, Tn = cdiv(p.M, t.bm), cdiv(p.N, t.bn)
+    Tk = cdiv(k_extent, t.bk)                 # k blocks per shard
+
+    # Per-core step compute time: chip rates shared evenly over C cores.
+    atoms = cdiv(t.bm, mm) * cdiv(t.bn, mn) * cdiv(t.bk, mk)
+    ct_mxu = atoms * (2.0 * mm * mn * mk) * C / hw.flops(p.in_dtype)
+    ct_vmem = ((t.bm * t.bk + t.bk * t.bn) * bi
+               + 2 * t.bm * t.bn * ACC_BYTES) * C / hw.vmem_bandwidth
+    ct = max(ct_mxu, ct_vmem)
+
+    caches = hw.cache_levels
+    backing = hw.backing
+    level_bytes = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
+    chip_clock = 0.0
+    part_clock = [0.0] * hw.partitions
+    last_chip: Dict = {}                      # (kind, key) -> clock
+    last_part: Dict = {}                      # (part, kind, key) -> clock
+
+    def serving_level(kind, key, part) -> MemoryLevel:
+        """Measured-reuse-distance placement: nearest cache whose budget
+        covers the byte distance since this panel's last use, at the
+        clock of the cache's scope."""
+        for lvl in reversed(caches):
+            if lvl.scope == "partition":
+                prev = last_part.get((part, kind, key))
+                dist = None if prev is None else part_clock[part] - prev
+            else:
+                prev = last_chip.get((kind, key))
+                dist = None if prev is None else chip_clock - prev
+            if dist is not None and dist <= lvl.budget():
+                return lvl
+        return backing
+
+    def record_use(kind, key, part, bytes_) -> None:
+        nonlocal chip_clock
+        chip_clock += bytes_
+        part_clock[part] += bytes_
+        last_chip[(kind, key)] = chip_clock
+        last_part[(part, kind, key)] = part_clock[part]
+
+    def fixup_level() -> MemoryLevel:
+        """Serving level for block partials (combine / stream-K fixup):
+        produced-then-immediately-consumed, footprint = the outstanding
+        partials of one tile."""
+        footprint = (t.split_k if t.schedule != "stream_k" else 1) \
+            * t.bm * t.bn * ACC_BYTES
+        for lvl in reversed(caches):
+            scale = 1.0 / hw.partitions if lvl.scope == "partition" else 1.0
+            if footprint * scale <= lvl.budget():
+                return lvl
+        return backing
+
+    core_time = [0.0] * C
+    total_bytes = 0.0
+    mxu_busy = 0.0
+    n_steps = 0
+    block_acc = t.bm * t.bn * ACC_BYTES
+    fix_lvl = fixup_level()
+    ep = p.epilogue
+
+    def span_cost(e, i, j, s, blk_lo, n_blk, core) -> float:
+        """Fetch+compute seconds for ``n_blk`` k-blocks (starting at block
+        ``blk_lo``) of k-shard ``s`` of tile (i, j) on ``core``; counts
+        bytes and steps.  O(1) via the constant interior step (full blocks)
+        + the ragged final k block of the shard."""
+        nonlocal total_bytes, mxu_busy, n_steps
+        part = core // hw.core_count
+        em = min(t.bm, p.M - i * t.bm)
+        en = min(t.bn, p.N - j * t.bn)
+        k_lo = s * k_extent + blk_lo * t.bk
+        k_hi = min(p.K, (s + 1) * k_extent)
+        span = max(0, min(n_blk * t.bk, k_hi - k_lo))  # real (unpadded) k
+        lvl_a = serving_level("a", (e, i, s), part)
+        lvl_b = serving_level("b", (e, j, s), part)
+        ragged = span % t.bk
+        nfull = span // t.bk
+        # ALL n_blk padded grid steps run (compute chews full blocks); only
+        # the real span moves bytes — exactly the single-core accounting.
+        n_empty = n_blk - nfull - (1 if ragged else 0)
+        secs = n_empty * ct
+        a_total = em * span * bi
+        b_total = span * en * bi
+        if nfull:
+            fa, fb = em * t.bk * bi, t.bk * en * bi
+            secs += nfull * max(ct, (fa * C / lvl_a.bandwidth
+                                     + fb * C / lvl_b.bandwidth)
+                                + hw.dma_fixed)
+        if ragged:
+            fa, fb = em * ragged * bi, ragged * en * bi
+            secs += max(ct, (fa * C / lvl_a.bandwidth
+                             + fb * C / lvl_b.bandwidth) + hw.dma_fixed)
+        level_bytes[lvl_a.name] += a_total
+        level_bytes[lvl_b.name] += b_total
+        total_bytes += a_total + b_total
+        mxu_busy += n_blk * ct / C
+        n_steps += n_blk
+        record_use("a", (e, i, s), part, a_total)
+        record_use("b", (e, j, s), part, b_total)
+        return secs
+
+    def writeback_cost(e, i, j, core) -> float:
+        """Output flush + epilogue operand fetch for tile (i, j)."""
+        nonlocal total_bytes
+        em = min(t.bm, p.M - i * t.bm)
+        en = min(t.bn, p.N - j * t.bn)
+        wb = em * en * bo + (ep.n_mn_operands * em * en
+                             + (en if ep.bias else 0)) * bi
+        level_bytes[backing.name] += wb
+        total_bytes += wb
+        part = core // hw.core_count
+        record_use("wb", (e, i, j), part, wb)
+        return wb * C / backing.bandwidth
+
+    tiles = [(e, i, j) for e in range(p.batch)
+             for (i, j) in _tile_order(Tm, Tn, t.group_m)]
+
+    if t.schedule == "stream_k":
+        steps_per_tile = t.split_k * Tk
+        total_steps = len(tiles) * steps_per_tile
+        q = cdiv(total_steps, C)              # strip length (k-steps)
+        units = total_steps
+        waves = q                             # max k-steps on any core
+        st = 0
+        for core in range(cdiv(total_steps, q)):
+            hi = min(st + q, total_steps)
+            strip_secs = 0.0
+            if st % steps_per_tile:
+                # strip boundary inside a tile: the previous core wrote a
+                # block partial, this one reads it back (fixup).
+                fix = 2.0 * block_acc
+                level_bytes[fix_lvl.name] += fix
+                total_bytes += fix
+                strip_secs += fix * C / fix_lvl.bandwidth
+            while st < hi:
+                ti, off = divmod(st, steps_per_tile)
+                e, i, j = tiles[ti]
+                s, blk = divmod(off, Tk)
+                n_sub = min(hi - st, Tk - blk)
+                strip_secs += span_cost(e, i, j, s, blk, n_sub, core)
+                st += n_sub
+                if st % steps_per_tile == 0:
+                    strip_secs += writeback_cost(e, i, j, core)
+            core_time[core] += strip_secs
+    else:
+        unit_list = [(e, i, j, s) for (e, i, j) in tiles
+                     for s in range(t.split_k)]
+        units = len(unit_list)
+        loads = [0] * C
+        for q_i, (e, i, j, s) in enumerate(unit_list):
+            core = q_i % C
+            loads[core] += 1
+            secs = span_cost(e, i, j, s, 0, Tk, core)
+            if t.split_k > 1:
+                # shard writes its block partial; last shard combines.
+                level_bytes[fix_lvl.name] += block_acc
+                total_bytes += block_acc
+                secs += block_acc * C / fix_lvl.bandwidth
+                if s == t.split_k - 1:
+                    rd = t.split_k * block_acc
+                    level_bytes[fix_lvl.name] += rd
+                    total_bytes += rd
+                    secs += rd * C / fix_lvl.bandwidth
+                    secs += writeback_cost(e, i, j, core)
+            else:
+                secs += writeback_cost(e, i, j, core)
+            core_time[core] += secs
+        waves = max(loads)
+
+    launch = hw.kernel_launch + hw.hbm_latency
+    end = launch + max(core_time)
+    return SimResult(time=end, hbm_bytes=total_bytes,
+                     mxu_busy=mxu_busy, steps=n_steps,
+                     level_bytes=level_bytes,
+                     units=units, waves=waves, cores=C)
 
 
 def exhaustive_best(p: GemmProblem, hw: HardwareSpec,

@@ -41,12 +41,16 @@ from repro.core.dtypes import DTYPE_BYTES
 
 SCOPES = ("device", "partition", "core")
 
+# Grid schedules the model can price (DESIGN.md §2: occupancy stage).
+SCHEDULES = ("data_parallel", "stream_k")
+
 # Default candidate menus (the TPU-shaped space of the seed; DESIGN.md §2).
 DEFAULT_BM_MENU = (8, 16, 32, 64, 128, 256, 512, 1024)
 DEFAULT_BN_MENU = (128, 256, 512, 1024)
 DEFAULT_BK_MENU = (128, 256, 512, 1024, 2048)
 DEFAULT_SPLIT_K_MENU = (1, 2, 4, 8)
 DEFAULT_GROUP_M_MENU = (1, 8)
+DEFAULT_SCHEDULE_MENU = ("data_parallel",)
 
 
 def _is_pow2(x: int) -> bool:
@@ -117,6 +121,10 @@ class Topology:
     levels: Tuple[MemoryLevel, ...]
     # Cores per partition-scope cache domain (XCDs on MI300X; 1 on TPU).
     partitions: int = 1
+    # Compute cores (CUs / SMs) per partition.  total_cores() =
+    # partitions * core_count is the chip-wide denominator of the Alg. 4
+    # wave model; 1 keeps the seed's single-sequential-core behaviour.
+    core_count: int = 1
     # Interconnect (per chip).
     ici_bandwidth: float = 0.0
     ici_links: int = 0
@@ -130,11 +138,15 @@ class Topology:
     bk_menu: Tuple[int, ...] = DEFAULT_BK_MENU
     split_k_menu: Tuple[int, ...] = DEFAULT_SPLIT_K_MENU
     group_m_menu: Tuple[int, ...] = DEFAULT_GROUP_M_MENU
+    schedule_menu: Tuple[str, ...] = DEFAULT_SCHEDULE_MENU
 
     def __post_init__(self):
         if len(self.levels) < 2:
             raise ValueError(
                 f"{self.name}: need at least (backing, staging) levels")
+        if self.partitions < 1 or self.core_count < 1:
+            raise ValueError(
+                f"{self.name}: partitions/core_count must be >= 1")
         for menu_name in ("bm_menu", "bn_menu", "bk_menu",
                           "split_k_menu", "group_m_menu"):
             menu = getattr(self, menu_name)
@@ -142,6 +154,11 @@ class Topology:
                 raise ValueError(
                     f"{self.name}: {menu_name} must be non-empty powers of "
                     f"two, got {menu}")
+        if not self.schedule_menu or not all(
+                s in SCHEDULES for s in self.schedule_menu):
+            raise ValueError(
+                f"{self.name}: schedule_menu entries must be from "
+                f"{SCHEDULES}, got {self.schedule_menu}")
 
     # ---- the chain ------------------------------------------------------
     @property
@@ -159,6 +176,10 @@ class Topology:
         """Intermediate levels (L2/LLC …), outermost -> innermost.  Empty on
         the TPU 1-level special case."""
         return self.levels[1:-1]
+
+    def total_cores(self) -> int:
+        """Chip-wide compute cores — the Alg. 4 wave denominator."""
+        return self.partitions * self.core_count
 
     def placement_levels(self) -> Tuple[MemoryLevel, ...]:
         """Levels whose capacity gates candidate legality: every level the
@@ -250,7 +271,7 @@ class Topology:
         d["levels"] = tuple(MemoryLevel(**lv) for lv in d["levels"])
         d["mxu_shape"] = tuple(d["mxu_shape"])
         for menu_name in ("bm_menu", "bn_menu", "bk_menu",
-                          "split_k_menu", "group_m_menu"):
+                          "split_k_menu", "group_m_menu", "schedule_menu"):
             if menu_name in d:
                 d[menu_name] = tuple(d[menu_name])
         return cls(**d)

@@ -21,6 +21,16 @@ The epilogue (bias add, gelu/silu/swiglu-gate, residual add, out-dtype cast
 accumulator, removing the full-output HBM round trips XLA would spend on
 separate post-ops (DESIGN.md §3).
 
+``TileConfig.schedule`` (occupancy stage, DESIGN.md §2): selections made on
+multi-core topologies may carry ``schedule="stream_k"`` — a persistent
+strip-scheduled kernel on GPUs.  The TPU Pallas grid is already persistent
+(one sequential pipeline walks every tile), so this kernel LOWERS stream_k
+to the existing split-K grid: the ``(tiles, sk, Tk)`` iteration order is
+exactly the flattened strip walk of a single core, and the in-VMEM
+accumulator plays the role of the strip-boundary partial (of which a
+1-core schedule has none).  The field therefore changes nothing about the
+lowering here — it exists so one selection table can drive both backends.
+
 Inputs must be pre-padded to block multiples — ``ops.matmul`` does this.
 """
 from __future__ import annotations
@@ -113,6 +123,9 @@ def matmul_pallas(
 
     One ``pallas_call`` regardless of split_k: k-shards accumulate into the
     VMEM scratch and the output is written exactly once.
+    ``config.schedule`` is accepted from any selection (TPU or GPU-shaped
+    topology) and lowered identically — ``stream_k`` degenerates to the
+    sequential split-K grid on a single-core chip (module docstring).
     """
     ep = epilogue or EPILOGUE_NONE
     M, K = a.shape

@@ -127,6 +127,13 @@ def matmul(
     the fused epilogue traffic, so calling this under shard_map gives
     per-chip-optimal tiles — the intended deployment (see
     distributed.collectives.tp_matmul).
+
+    ``config`` (and selections made against multi-core topologies) may
+    carry ``TileConfig.schedule``: ``"data_parallel"`` or ``"stream_k"``.
+    The schedule is a *pricing* distinction of the occupancy-aware wave
+    model (DESIGN.md §2); on the TPU backend both lower to the same
+    in-kernel split-K grid (`kernels.matmul` module docstring), so passing
+    a stream_k selection here is valid and numerically identical.
     """
     be = backend or get_backend()
     out_dtype = out_dtype or a.dtype

@@ -1,0 +1,120 @@
+"""Golden-selection regression (satellite of the occupancy-stage PR).
+
+``tests/goldens/llama3_selections.json`` pins the FULL llama3-sweep
+selection — config 6-tuple, candidate count, and the exact float64
+predicted latency (hex, bit-for-bit) — for every preset.  This replaces
+the ad-hoc PR1_GOLDEN table that lived in ``tests/test_topology.py``:
+
+* the ``tpu_v5e`` section IS that table (verified identical when this
+  file was generated) — single-core chains must reproduce the PR 1/2
+  model bit-for-bit through every refactor;
+* the GPU sections pin the occupancy-aware behaviour: stream-K / split-K
+  on tail-wave shapes, cache-priced group_m.
+
+On mismatch the test prints a human-readable diff table and writes it to
+``experiments/golden_diff.txt`` (uploaded as a CI artifact by the nightly
+job).  Regenerate deliberately with
+``PYTHONPATH=src python tools/regen_goldens.py`` and review the diff.
+"""
+import json
+import os
+
+from benchmarks.llama3_shapes import llama3_gemms
+from repro.core import PRESETS, select_gemm_config
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "llama3_selections.json")
+DIFF_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "experiments", "golden_diff.txt")
+
+
+def _current_entry(M, N, K, hw):
+    s = select_gemm_config(M, N, K, hw=hw)
+    c = s.config
+    return {
+        "M": M, "N": N, "K": K,
+        "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
+                   "split_k": c.split_k, "group_m": c.group_m,
+                   "schedule": c.schedule},
+        "n_candidates": s.n_candidates,
+        "total_hex": s.predicted.total.hex(),
+    }
+
+
+def _fmt(e):
+    c = e["config"]
+    sched = "" if c["schedule"] == "data_parallel" else "/streamk"
+    return (f"{c['bm']}x{c['bn']}x{c['bk']}/sk{c['split_k']}"
+            f"/g{c['group_m']}{sched} "
+            f"P={e['n_candidates']} {e['total_hex']}")
+
+
+def test_llama3_selection_goldens():
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert set(golden) == set(PRESETS), (
+        "golden file presets out of date — regenerate deliberately with "
+        "tools/regen_goldens.py")
+    mismatches = []
+    for hw_name in sorted(PRESETS):
+        hw = PRESETS[hw_name]
+        want_entries = golden[hw_name]
+        seen = set()
+        for size in ("8b", "70b"):
+            for (name, M, N, K) in llama3_gemms(size):
+                seen.add(name)
+                got = _current_entry(M, N, K, hw)
+                want = want_entries.get(name)
+                if want != got:
+                    mismatches.append((hw_name, name, want, got))
+        assert seen == set(want_entries), (hw_name, "sweep drifted")
+    if mismatches:
+        lines = [
+            f"{len(mismatches)} golden selection mismatch(es) — if the "
+            "model change is deliberate, regenerate with "
+            "tools/regen_goldens.py and review:",
+            f"{'preset':18} {'gemm':20} {'golden':44} current",
+        ]
+        for hw_name, name, want, got in mismatches:
+            lines.append(f"{hw_name:18} {name:20} "
+                         f"{'<missing>' if want is None else _fmt(want):44} "
+                         f"{_fmt(got)}")
+        table = "\n".join(lines)
+        os.makedirs(os.path.dirname(DIFF_PATH), exist_ok=True)
+        with open(DIFF_PATH, "w") as f:
+            f.write(table + "\n")
+        raise AssertionError(table)
+
+
+def test_goldens_pin_single_core_bit_parity():
+    """The tpu_v5e golden section carries the PR 1/2 lineage: every entry
+    is a sk=1, data_parallel selection whose hex latency is bit-stable."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for name, e in golden["tpu_v5e"].items():
+        assert e["config"]["split_k"] == 1, name
+        assert e["config"]["schedule"] == "data_parallel", name
+        assert float.fromhex(e["total_hex"]) > 0, name
+    # spot anchor: the first PR 1 golden, hard-coded so a wholesale
+    # regeneration of the file cannot silently rewrite the lineage
+    qkv = golden["tpu_v5e"]["8b/qkv/t1024"]
+    assert qkv["config"] == {"bm": 512, "bn": 1024, "bk": 128,
+                             "split_k": 1, "group_m": 1,
+                             "schedule": "data_parallel"}
+    assert qkv["n_candidates"] == 176
+    assert qkv["total_hex"] == "0x1.19b6b4bb2dfd5p-12"
+
+
+def test_goldens_pin_gpu_tail_wave_behaviour():
+    """Acceptance: on the multi-core GPU presets the golden selections use
+    split_k > 1 or stream_k for the tail-wave llama3 shapes (small-token
+    rows), pinning the wave model's restored split-K rationale."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for hw_name in ("gpu_mi300x_like", "gpu_h100_like"):
+        t1024 = {n: e for n, e in golden[hw_name].items() if "/t1024" in n}
+        assert t1024
+        n_ksplit = sum(e["config"]["split_k"] > 1
+                       or e["config"]["schedule"] == "stream_k"
+                       for e in t1024.values())
+        assert n_ksplit >= len(t1024) // 2, (hw_name, n_ksplit, len(t1024))

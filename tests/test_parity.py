@@ -1,0 +1,153 @@
+"""Three-way scoring parity suite (satellite of the occupancy-stage PR).
+
+The latency model exists in three hand-synced copies — the scalar
+``score_candidate``, the vectorized ``score_candidates`` /
+``score_candidate_arrays``, and the static-term-cached
+``selector.select_fast`` — and every model change (the PR 2 cache
+recurrence, this PR's wave/occupancy stage and stream-K pricing) must land
+in all three.  This suite pins the contract exhaustively instead of
+spot-checking: identical candidate enumeration, identical latency arrays,
+identical argmin, across random problems x ALL presets x dtypes x
+epilogues.
+
+Tier-1 runs a reduced grid; the full property grid is ``-m slow``
+(nightly CI).
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # CPU container: shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    PRESETS,
+    SCHEDULES,
+    Epilogue,
+    GemmProblem,
+    argmin_candidate,
+    candidate_arrays,
+    candidate_tiles,
+    gemm_latency,
+    score_candidate,
+    score_candidates,
+)
+from repro.core.selector import select_fast
+
+DIMS = st.integers(min_value=1, max_value=8192)
+DTYPES = ("bfloat16", "float32", "int8")
+EPILOGUES = (Epilogue(), Epilogue(bias=True, activation="gelu"),
+             Epilogue(activation="swiglu_gate", residual=True))
+
+
+def _sequential_argmin(p, cands, hw, scores):
+    """The seed's sequential scoring loop: the reference argmin/tie-break
+    policy all vectorized paths must reproduce."""
+    best, best_score = None, None
+    for t, s in zip(cands, scores):
+        if best_score is None or s < best_score - 1e-15 or (
+                abs(s - best_score) <= 1e-15
+                and (t.bm * t.bn * t.bk) > (best.bm * best.bn * best.bk)):
+            best, best_score = t, s
+    return best
+
+
+def assert_three_way_parity(p: GemmProblem, hw) -> None:
+    """The whole contract for one (problem, preset):
+
+    1. vectorized enumeration == scalar enumeration (order included);
+    2. scalar fast path == full model, vectorized batch == full model;
+    3. select_fast argmin == vectorized argmin == sequential-loop argmin.
+    """
+    cands = candidate_tiles(p, hw)
+    assert cands, (hw.name, p)
+    bm, bn, bk, sk, gm, sched = candidate_arrays(p, hw)
+    assert len(bm) == len(cands), (hw.name, p)
+    for i, t in enumerate(cands):
+        assert (t.bm, t.bn, t.bk, t.split_k, t.group_m, t.schedule) == (
+            int(bm[i]), int(bn[i]), int(bk[i]), int(sk[i]), int(gm[i]),
+            SCHEDULES[int(sched[i])]), (hw.name, p, i)
+
+    vec = score_candidates(p, cands, hw)
+    scal = np.array([score_candidate(p, t, hw) for t in cands])
+    assert np.allclose(vec, scal, rtol=1e-9), (hw.name, p)
+    # both against the full-breakdown model on a stride of the space
+    for t, v in list(zip(cands, vec))[::7]:
+        full = gemm_latency(p, t, hw).total
+        assert math.isclose(score_candidate(p, t, hw), full,
+                            rel_tol=1e-12), (hw.name, p, t)
+        assert math.isclose(float(v), full, rel_tol=1e-9), (hw.name, p, t)
+
+    best_fast, n = select_fast(p, hw)
+    assert n == len(cands), (hw.name, p)
+    best_vec = argmin_candidate(p, cands, hw)
+    best_seq = _sequential_argmin(p, cands, hw, scal)
+    assert best_fast == best_vec == best_seq, (
+        hw.name, p, best_fast, best_vec, best_seq)
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: reduced grid — every preset, two dtypes, problem shapes chosen to
+# hit the regimes that have historically diverged (ragged, skinny, square,
+# tail-wave, batched).
+# ---------------------------------------------------------------------------
+
+TIER1_SHAPES = [(4096, 4096, 4096), (100, 300, 77), (8, 8192, 8192),
+                (1024, 6144, 4096), (640, 256, 256), (13, 77, 100)]
+
+
+@pytest.mark.parametrize("hw_name", sorted(PRESETS))
+def test_three_way_parity_tier1(hw_name):
+    hw = PRESETS[hw_name]
+    for (M, N, K) in TIER1_SHAPES:
+        for dt in ("bfloat16", "float32"):
+            assert_three_way_parity(
+                GemmProblem(M=M, N=N, K=K, in_dtype=dt), hw)
+
+
+def test_three_way_parity_epilogue_and_batch():
+    for hw_name in ("tpu_v5e", "gpu_mi300x_like"):
+        hw = PRESETS[hw_name]
+        for ep in EPILOGUES:
+            assert_three_way_parity(
+                GemmProblem(M=1024, N=4096, K=4096, epilogue=ep), hw)
+        assert_three_way_parity(
+            GemmProblem(M=512, N=1024, K=2048, batch=4), hw)
+
+
+@settings(max_examples=10, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_three_way_parity_property_small(M, N, K):
+    """Property slice kept in tier-1: random shapes on the 1-level TPU chain
+    and one multi-core multi-level chain."""
+    for hw_name in ("tpu_v5e", "gpu_h100_like"):
+        assert_three_way_parity(GemmProblem(M=M, N=N, K=K),
+                                PRESETS[hw_name])
+
+
+# ---------------------------------------------------------------------------
+# Nightly: the full grid — random problems x all presets x all dtypes x
+# epilogues (marked slow; `pytest -q -m slow`).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS)
+def test_three_way_parity_full_grid(M, N, K):
+    for hw in PRESETS.values():
+        for dt in DTYPES:
+            assert_three_way_parity(
+                GemmProblem(M=M, N=N, K=K, in_dtype=dt), hw)
+
+
+@pytest.mark.slow
+@settings(max_examples=12, deadline=None)
+@given(M=DIMS, N=DIMS, K=DIMS, batch=st.integers(min_value=1, max_value=8))
+def test_three_way_parity_full_epilogue_batch(M, N, K, batch):
+    for hw in PRESETS.values():
+        for ep in EPILOGUES:
+            assert_three_way_parity(
+                GemmProblem(M=M, N=N, K=K, batch=batch, epilogue=ep), hw)

@@ -194,12 +194,14 @@ def test_candidate_arrays_and_select_fast_parity():
         for ep in [Epilogue(), Epilogue(bias=True, activation="gelu")]:
             p = GemmProblem(M=M, N=N, K=K, epilogue=ep)
             tiles = candidate_tiles(p, TPU_V5E)
-            bm, bn, bk, sk, gm = candidate_arrays(p, TPU_V5E)
+            bm, bn, bk, sk, gm, sched = candidate_arrays(p, TPU_V5E)
             assert len(bm) == len(tiles)
+            from repro.core import SCHEDULES
             for i, t in enumerate(tiles):
-                assert (t.bm, t.bn, t.bk, t.split_k, t.group_m) == \
+                assert (t.bm, t.bn, t.bk, t.split_k, t.group_m,
+                        t.schedule) == \
                     (int(bm[i]), int(bn[i]), int(bk[i]),
-                     int(sk[i]), int(gm[i]))
+                     int(sk[i]), int(gm[i]), SCHEDULES[int(sched[i])])
             best, n = select_fast(p, TPU_V5E)
             assert n == len(tiles)
             assert best == argmin_candidate(p, tiles, TPU_V5E), (M, N, K, ep)

@@ -1,0 +1,269 @@
+"""Occupancy-stage (Alg. 4 chip-wide) + simulator cross-validation tests.
+
+The model-fidelity check the paper's 95%-of-autotuned claim rests on:
+for every preset, the event simulator — which schedules units round-robin
+over real cores and measures reuse distances, sharing nothing with
+``latency.py`` but the Topology constants — must reproduce the closed-form
+model's wave counts, grid-step counts, and total moved bytes EXACTLY
+(float64 1-ulp bounds), on a shape grid that includes ragged and skinny
+GEMMs.  Per-level byte *splits* are measured (stack-distance) vs
+closed-form (reuse windows) — structurally different mechanisms — so they
+are cross-checked for conservation and direction, not equality.
+
+Tier-1 runs a reduced grid; the full grid is ``-m slow`` (nightly CI).
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    PRESETS,
+    GemmProblem,
+    TileConfig,
+    candidate_tiles,
+    gemm_latency,
+    grid_shape,
+    hbm_traffic,
+    schedule_extra_classes,
+    select_gemm_config,
+    simulate_gemm,
+    wave_model,
+)
+
+MULTI_CORE = ("gpu_mi300x_like", "gpu_h100_like")
+
+# Ragged + skinny + square + batched: the regimes where padded-vs-real
+# accounting historically diverged.
+SHAPE_GRID = [(4096, 4096, 4096), (1000, 1000, 1000), (100, 300, 77),
+              (8, 8192, 512), (8192, 8, 512), (640, 256, 256),
+              (1024, 6144, 4096), (129, 257, 513)]
+
+CONFIG_GRID = [TileConfig(128, 128, 64), TileConfig(64, 64, 32, group_m=4),
+               TileConfig(128, 64, 64, split_k=4),
+               TileConfig(128, 128, 64, schedule="stream_k"),
+               TileConfig(64, 128, 32, group_m=8, schedule="stream_k")]
+
+
+def assert_sim_matches_model(p: GemmProblem, t: TileConfig, hw) -> None:
+    """Waves / units / steps exact; total bytes to 1-ulp accumulation."""
+    from repro.core import DTYPE_BYTES
+    r = simulate_gemm(p, t, hw)
+    units, waves, occ = wave_model(p, t, hw)
+    Tm, Tn, Tk = grid_shape(p, t)
+    assert r.steps == Tm * Tn * Tk * p.batch, (hw.name, p, t)
+    assert r.units == units, (hw.name, p, t, r.units, units)
+    assert r.waves == waves, (hw.name, p, t, r.waves, waves)
+    assert r.cores == hw.total_cores()
+    base = hbm_traffic(p, t, revisit=hw.total_cores() == 1)
+    extra = sum(b for b, _ in schedule_extra_classes(p, t, hw))
+    # Known exact-vs-mean convention gap: the simulator fetches the (bn,)
+    # bias slice at every tile flush, the model prices the row once
+    # (compulsory) — re-reads are cache-resident.  (M, N)-shaped epilogue
+    # operands tile exactly, so only the bias row differs.
+    bias_delta = ((Tm - 1) * p.batch * p.N * DTYPE_BYTES[p.in_dtype]
+                  if p.epilogue.bias else 0)
+    # Second convention gap, single-core chains only: with Tn == 1 and a
+    # Tk == 1 grid the B block index never changes between consecutive
+    # steps, so the event simulator revisit-skips EVERY B re-fetch (one
+    # fetch per batch element); the closed form prices the mean skip
+    # fraction (0 ungrouped, (g-1)/g grouped).  The model is deliberately
+    # a mean — the delta is closed-form too, so the check stays exact.
+    revisit_delta = 0.0
+    if hw.total_cores() == 1 and Tk == 1 and Tn == 1 and Tm > 1:
+        g = min(t.group_m, Tm)
+        b_skip = (g - 1) / g if t.group_m > 1 else 0.0
+        revisit_delta = (Tm * (1.0 - b_skip) - 1.0) \
+            * p.K * p.N * DTYPE_BYTES[p.in_dtype] * p.batch
+    want = base + extra + bias_delta - revisit_delta
+    assert math.isclose(r.hbm_bytes, want, rel_tol=1e-12), (
+        hw.name, p, t, r.hbm_bytes, want)
+    # per-level counters conserve the total and never go negative
+    assert math.isclose(sum(r.level_bytes.values()), r.hbm_bytes,
+                        rel_tol=1e-12)
+    assert all(v >= 0.0 for v in r.level_bytes.values())
+
+
+# ---------------------------------------------------------------------------
+# Closed-form wave model unit behaviour.
+# ---------------------------------------------------------------------------
+
+def test_wave_model_single_core_is_identity():
+    """TPU chains: units == waves, factor == 1.0 EXACTLY (the bit-parity
+    precondition for the whole occupancy stage)."""
+    p = GemmProblem(M=4096, N=4096, K=4096)
+    for name in ("tpu_v5e", "tpu_v5p", "tpu_v4"):
+        hw = PRESETS[name]
+        assert hw.total_cores() == 1
+        for t in candidate_tiles(p, hw)[:10]:
+            units, waves, occ = wave_model(p, t, hw)
+            assert units == waves
+            assert occ == 1.0  # exact float equality, not approx
+
+
+def _divisor_tn(C: int) -> int:
+    """A Tn that divides the core count so tiles can equal C exactly."""
+    for tn in (8, 4, 2):
+        if C % tn == 0:
+            return tn
+    return 1
+
+
+def test_wave_model_quantization_cliff():
+    """tiles == k*C fills the chip (factor 1.0); one more tile starts a new
+    nearly-empty wave (factor ~2 at k == 1)."""
+    for name in MULTI_CORE:
+        hw = PRESETS[name]
+        C = hw.total_cores()
+        t = TileConfig(128, 128, 64)
+        Tn = _divisor_tn(C)
+        N = 128 * Tn
+        M_full = (C // Tn) * 128                          # tiles == C exactly
+        p_full = GemmProblem(M=M_full, N=N, K=4096)
+        units, waves, occ = wave_model(p_full, t, hw)
+        assert units == C and waves == 1 and occ == 1.0
+        p_over = GemmProblem(M=M_full + 128, N=N, K=4096)
+        units2, waves2, occ2 = wave_model(p_over, t, hw)
+        assert waves2 == 2
+        assert occ2 > 1.9                                 # tail-wave waste
+        # the model's total latency reproduces the cliff
+        lat_full = gemm_latency(p_full, t, hw)
+        lat_over = gemm_latency(p_over, t, hw)
+        assert lat_over.total > lat_full.total * 1.5
+        assert lat_full.occupancy == 1.0
+        assert lat_over.occupancy < 0.6
+
+
+def test_stream_k_erases_tile_granular_tail():
+    """At a tile-count cliff, stream_k's k-step-granular strips keep the
+    quantization factor ~1 where data_parallel pays ~2x."""
+    for name in MULTI_CORE:
+        hw = PRESETS[name]
+        C = hw.total_cores()
+        M = ((C // 8) + 1) * 128                          # one tile over
+        p = GemmProblem(M=M, N=1024, K=4096)
+        dp = TileConfig(128, 128, 64)
+        sk = TileConfig(128, 128, 64, schedule="stream_k")
+        _, _, occ_dp = wave_model(p, dp, hw)
+        _, _, occ_sk = wave_model(p, sk, hw)
+        assert occ_dp > 1.5
+        assert occ_sk < 1.05
+        assert gemm_latency(p, sk, hw).total < gemm_latency(p, dp, hw).total
+
+
+def test_split_k_multiplies_units():
+    """split_k multiplies data-parallel units — its restored GPU rationale —
+    and pays combine traffic for it."""
+    hw = PRESETS["gpu_mi300x_like"]
+    p = GemmProblem(M=512, N=1024, K=8192)
+    t1 = TileConfig(128, 128, 64, split_k=1)
+    t4 = TileConfig(128, 128, 64, split_k=4)
+    u1, _, occ1 = wave_model(p, t1, hw)
+    u4, _, occ4 = wave_model(p, t4, hw)
+    assert u4 == 4 * u1
+    assert occ4 < occ1                                    # better occupancy
+    assert schedule_extra_classes(p, t1, hw) == []
+    (bytes4, window4), = schedule_extra_classes(p, t4, hw)
+    Tm, Tn, _ = grid_shape(p, t4)
+    assert bytes4 == 2.0 * 4 * Tm * Tn * 128 * 128 * 4    # f32 block partials
+    # on the single-core TPU chain split-K stays in-kernel: no partials
+    assert schedule_extra_classes(p, t4, PRESETS["tpu_v5e"]) == []
+
+
+def test_tail_wave_selects_k_split_or_stream_k():
+    """Acceptance: on the GPU presets the tail-wave llama3 shapes select
+    split_k > 1 or stream_k — the wave model restored their rationale."""
+    from benchmarks.llama3_shapes import llama3_gemms
+    for name in MULTI_CORE:
+        hw = PRESETS[name]
+        hits = 0
+        tail_shapes = 0
+        for (gname, M, N, K) in llama3_gemms("8b", tokens=(1024,)):
+            sel = select_gemm_config(M, N, K, hw=hw)
+            c = sel.config
+            # a shape is tail-wave-prone if the dp/sk1 twin underfills
+            twin = TileConfig(c.bm, c.bn, c.bk, split_k=1,
+                              group_m=c.group_m)
+            _, _, occ_twin = wave_model(
+                GemmProblem(M=M, N=N, K=K), twin, hw)
+            if occ_twin > 1.1:
+                tail_shapes += 1
+                hits += c.split_k > 1 or c.schedule == "stream_k"
+        assert tail_shapes > 0, name                      # grid has them
+        assert hits == tail_shapes, (name, hits, tail_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Simulator cross-validation (tier-1 reduced grid).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw_name", sorted(PRESETS))
+def test_simulator_matches_wave_model_tier1(hw_name):
+    hw = PRESETS[hw_name]
+    for (M, N, K) in SHAPE_GRID[:5]:
+        p = GemmProblem(M=M, N=N, K=K)
+        for t in CONFIG_GRID[:3]:
+            assert_sim_matches_model(p, t, hw)
+
+
+def test_simulator_reproduces_tail_wave_cliff():
+    """Acceptance: the simulator independently reproduces the modeled
+    tail-wave latency cliff (it schedules units over cores; it never reads
+    the closed form)."""
+    for name in MULTI_CORE:
+        hw = PRESETS[name]
+        C = hw.total_cores()
+        t = TileConfig(128, 128, 64)
+        N = 128 * 8
+        M_full = (C // 8) * 128
+        p_full = GemmProblem(M=M_full, N=N, K=2048)
+        p_over = GemmProblem(M=M_full + 128, N=N, K=2048)
+        r_full = simulate_gemm(p_full, t, hw)
+        r_over = simulate_gemm(p_over, t, hw)
+        assert r_full.waves == 1 and r_over.waves == 2
+        # one extra tile, nearly double the time: the cliff
+        assert r_over.time > r_full.time * 1.5, name
+        # stream_k recovers it in the simulator too
+        r_sk = simulate_gemm(p_over,
+                             TileConfig(128, 128, 64, schedule="stream_k"),
+                             hw)
+        assert r_sk.time < r_over.time * 0.75, name
+
+
+def test_simulator_batched_and_epilogue_cross_check():
+    from repro.core import Epilogue
+    p = GemmProblem(M=300, N=500, K=700, batch=3,
+                    epilogue=Epilogue(bias=True, activation="gelu"))
+    for name in MULTI_CORE:
+        assert_sim_matches_model(p, TileConfig(64, 64, 32), PRESETS[name])
+        assert_sim_matches_model(
+            p, TileConfig(64, 64, 32, schedule="stream_k"), PRESETS[name])
+
+
+# ---------------------------------------------------------------------------
+# Nightly full grid (slow): every preset x full shape grid x full config
+# grid, plus the selected config of every llama3 sweep shape.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hw_name", sorted(PRESETS))
+def test_simulator_matches_wave_model_full(hw_name):
+    hw = PRESETS[hw_name]
+    for (M, N, K) in SHAPE_GRID:
+        p = GemmProblem(M=M, N=N, K=K)
+        for t in CONFIG_GRID:
+            assert_sim_matches_model(p, t, hw)
+        # and the model's own choice for the shape
+        sel = select_gemm_config(M, N, K, hw=hw)
+        assert_sim_matches_model(p, sel.config, hw)
+
+
+@pytest.mark.slow
+def test_simulator_matches_wave_model_llama3():
+    from benchmarks.llama3_shapes import llama3_gemms
+    for hw_name in MULTI_CORE:
+        hw = PRESETS[hw_name]
+        for size in ("8b", "70b"):
+            for (name, M, N, K) in llama3_gemms(size):
+                p = GemmProblem(M=M, N=N, K=K)
+                sel = select_gemm_config(M, N, K, hw=hw)
+                assert_sim_matches_model(p, sel.config, hw)

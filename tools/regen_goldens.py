@@ -1,0 +1,78 @@
+"""Regenerate the golden-selection regression file.
+
+    PYTHONPATH=src python tools/regen_goldens.py [--check]
+
+Writes ``tests/goldens/llama3_selections.json``: the full llama3-sweep
+selection (config 6-tuple, candidate count, exact float64 predicted total
+as hex) for every preset.  ``--check`` only diffs, exits non-zero on
+mismatch (what ``tests/test_golden_selections.py`` does with a readable
+table).
+
+Regenerating is a DELIBERATE act: single-core (TPU) entries are the PR 1/2
+bit-for-bit lineage and must never change; multi-level entries change only
+when the model deliberately does.  Review the diff before committing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from benchmarks.llama3_shapes import llama3_gemms  # noqa: E402
+from repro.core import PRESETS, select_gemm_config  # noqa: E402
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "tests", "goldens", "llama3_selections.json")
+
+
+def compute_goldens() -> dict:
+    out = {}
+    for hw_name in sorted(PRESETS):
+        hw = PRESETS[hw_name]
+        entries = {}
+        for size in ("8b", "70b"):
+            for (name, M, N, K) in llama3_gemms(size):
+                s = select_gemm_config(M, N, K, hw=hw)
+                c = s.config
+                entries[name] = {
+                    "M": M, "N": N, "K": K,
+                    "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
+                               "split_k": c.split_k, "group_m": c.group_m,
+                               "schedule": c.schedule},
+                    "n_candidates": s.n_candidates,
+                    "total_hex": s.predicted.total.hex(),
+                }
+        out[hw_name] = entries
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff against the checked-in file, do not write")
+    args = ap.parse_args()
+    got = compute_goldens()
+    path = os.path.normpath(GOLDEN_PATH)
+    if args.check:
+        with open(path) as f:
+            want = json.load(f)
+        if got != want:
+            print("golden mismatch — run tests/test_golden_selections.py "
+                  "for the readable diff table")
+            return 1
+        print(f"goldens match ({sum(len(v) for v in got.values())} entries)")
+        return 0
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(got, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}: {sum(len(v) for v in got.values())} entries "
+          f"across {len(got)} presets")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
