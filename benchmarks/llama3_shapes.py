@@ -8,32 +8,12 @@ argmin per shape.
 from __future__ import annotations
 
 import argparse
-from typing import List, Tuple
 
 from benchmarks.common import write_csv
+from repro.configs.llama3_shapes import (  # noqa: F401  (re-export)
+    LLAMA3, TOKENS, llama3_gemms)
 from repro.core import (GemmProblem, candidate_tiles, exhaustive_best,
                         get_hardware, select_gemm_config, simulate_gemm)
-
-# (d_model, kv_dim, d_ff, vocab)
-LLAMA3 = {
-    "8b": (4096, 1024, 14336, 128256),
-    "70b": (8192, 1024, 28672, 128256),
-}
-TOKENS = (1024, 4096, 8192)
-
-
-def llama3_gemms(size: str, tokens=TOKENS) -> List[Tuple[str, int, int, int]]:
-    d, kv, ff, v = LLAMA3[size]
-    out = []
-    for t in tokens:
-        out += [
-            (f"{size}/qkv/t{t}", t, d + 2 * kv, d),
-            (f"{size}/attn_out/t{t}", t, d, d),
-            (f"{size}/gate_up/t{t}", t, 2 * ff, d),
-            (f"{size}/down/t{t}", t, d, ff),
-            (f"{size}/lm_head/t{t}", t, v, d),
-        ]
-    return out
 
 
 def run(hw_name: str = "tpu_v5e", verbose: bool = True,

@@ -1,0 +1,52 @@
+"""§Fidelity: the paper's %-of-exhaustive-autotune table (calib oracle).
+
+For every preset, price the FULL candidate menu of each llama3 key-GEMM
+shape on the simulator-backed virtual device, record the empirical argmin,
+and report what fraction of that optimum the zero-autotune analytical
+selection achieves (paper's >95% headline claim).  Artifacts land in
+``experiments/calib/fidelity_report.{json,csv,md}``.
+
+    PYTHONPATH=src python -m benchmarks.model_fidelity [--smoke | --full]
+        [--presets a,b,...]
+
+``--smoke`` divides the shapes by 8 (exhaustive simulation of several
+hundred candidates per shape is minutes per GPU preset at full scale) —
+the CI rot check; ``--full`` runs 8b+70b at three token counts.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Optional, Sequence
+
+from repro.calib.oracle import fidelity_report
+from repro.core import PRESETS
+
+
+def run(presets: Optional[Sequence[str]] = None, smoke: bool = False,
+        full: bool = False, verbose: bool = True) -> Dict:
+    presets = tuple(presets or sorted(PRESETS))
+    if full:
+        sizes, tokens, scale = ("8b", "70b"), (1024, 4096, 8192), 1
+    elif smoke:
+        sizes, tokens, scale = ("8b",), (1024,), 8
+    else:
+        sizes, tokens, scale = ("8b",), (1024,), 1
+    return fidelity_report(presets=presets, sizes=sizes, tokens=tokens,
+                           scale=scale, verbose=verbose)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shapes / 8 — pipeline rot check")
+    ap.add_argument("--full", action="store_true",
+                    help="8b + 70b at all token counts (slow)")
+    ap.add_argument("--presets", default=None,
+                    help="comma-separated preset names (default: all)")
+    args = ap.parse_args()
+    run(presets=args.presets.split(",") if args.presets else None,
+        smoke=args.smoke, full=args.full)
+
+
+if __name__ == "__main__":
+    main()

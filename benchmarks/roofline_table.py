@@ -3,7 +3,11 @@
 Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
 CSV + a markdown table for EXPERIMENTS.md: three roofline terms, dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, analytic memory fit,
-per (arch x shape x mesh).
+per (arch x shape x mesh) — plus one per-level port column per memory
+level of the artifact's recorded *serving topology* (the outermost entry
+is the classic memory term; inner entries bound what a cache-resident
+schedule could recover).  Artifacts predating the topology record fall
+back to the roofline's own ``level_seconds`` when present, else blank.
 """
 from __future__ import annotations
 
@@ -11,7 +15,7 @@ import argparse
 import glob
 import json
 import os
-from typing import List
+from typing import Dict, List
 
 from benchmarks.common import write_csv
 
@@ -27,17 +31,48 @@ def load_records(path: str = DRYRUN_DIR) -> List[dict]:
     return recs
 
 
+def level_seconds(r: dict) -> Dict[str, float]:
+    """Per-level port seconds for one record: HLO bytes through each level
+    of the recorded serving topology (inclusive hierarchy — every byte
+    crosses every port outward of where it is served; with only aggregate
+    HLO bytes available this is the all-traffic bound per port).  Prefers
+    the artifact's own topology record; falls back to the roofline's
+    precomputed ``level_seconds``."""
+    topo = r.get("topology")
+    if topo and "levels" in topo:
+        hlo_bytes = float(r.get("hbm_bytes_analytic", {}).get("total", 0.0)
+                          or r.get("cost_module", {}).get("bytes", 0.0))
+        return {lvl["name"]: hlo_bytes / lvl["bandwidth"]
+                for lvl in topo["levels"][:-1]}
+    return dict(r.get("roofline", {}).get("level_seconds", {}))
+
+
 def run(verbose: bool = True, path: str = DRYRUN_DIR):
     rows = []
+    recs = load_records(path)
+    # Union of level names across artifacts, outermost-first per record
+    # order — one CSV/markdown column per level.
+    level_names: List[str] = []
+    for r in recs:
+        for name in level_seconds(r):
+            if name not in level_names:
+                level_names.append(name)
+    lvl_hdr = [f"level_s:{n}" for n in level_names]
     md = ["| arch | shape | mesh | compute_s | memory_s | coll_s | bound | "
-          "useful | mem GiB/dev | fits |",
-          "|---|---|---|---|---|---|---|---|---|---|"]
-    for r in load_records(path):
+          "useful | mem GiB/dev | fits | topo | "
+          + " | ".join(lvl_hdr) + " |",
+          "|---|---|---|---|---|---|---|---|---|---|---|"
+          + "---|" * len(level_names)]
+    for r in recs:
         rf = r.get("roofline", {})
         mem_an = r.get("memory_analytic_gib", {})
         fits = mem_an.get("fits_16gib_hbm", "?")
         total_gib = mem_an.get("total_gib", 0)
         src = "probes" if "cost_reconstructed" in r else "module"
+        lvl_s = level_seconds(r)
+        topo_name = r.get("topology", {}).get("name", "?")
+        lvl_cells = [f"{lvl_s[n]:.4e}" if n in lvl_s else ""
+                     for n in level_names]
         rows.append([
             r["arch"], r["shape"], r["mesh"], r["chips"],
             f"{rf.get('compute_s', 0):.4e}", f"{rf.get('memory_s', 0):.4e}",
@@ -49,21 +84,21 @@ def run(verbose: bool = True, path: str = DRYRUN_DIR):
             f"{r.get('hbm_bytes_analytic', {}).get('total', 0):.4e}",
             f"{r.get('cost_module', {}).get('bytes', 0):.4e}",
             round(r.get("memory", {}).get("temp_bytes", 0) / 2**30, 2),
-            src,
-        ])
+            src, topo_name,
+        ] + lvl_cells)
         md.append("| " + " | ".join(str(x) for x in [
             r["arch"], r["shape"], r["mesh"],
             f"{rf.get('compute_s', 0):.2e}", f"{rf.get('memory_s', 0):.2e}",
             f"{rf.get('collective_s', 0):.2e}", rf.get("bottleneck", "?"),
             f"{rf.get('useful_flop_ratio', 0):.2f}",
-            round(total_gib, 2), fits]) + " |")
+            round(total_gib, 2), fits, topo_name] + lvl_cells) + " |")
     path_csv = write_csv(
         "roofline_table.csv",
         ["arch", "shape", "mesh", "chips", "compute_s", "memory_s",
          "collective_s", "bottleneck", "useful_flop_ratio",
          "analytic_mem_gib", "fits_hbm", "microbatches", "flops_dev",
          "bytes_analytic_dev", "bytes_xla_cpu_dev", "xla_temp_gib",
-         "source"], rows)
+         "source", "serving_topology"] + lvl_hdr, rows)
     md_path = path_csv.replace(".csv", ".md")
     with open(md_path, "w") as f:
         f.write("\n".join(md) + "\n")

@@ -22,9 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fused_epilogue, hierarchy_sweep, llama3_shapes,
-                            peak_vs_intensity, roofline_table,
-                            selection_efficiency, selection_overhead,
-                            wave_quantization)
+                            model_fidelity, peak_vs_intensity,
+                            roofline_table, selection_efficiency,
+                            selection_overhead, wave_quantization)
     from repro.core import clear_selection_cache, select_gemm_config
 
     n_eff = 1000 if args.full else (8 if args.smoke else 120)
@@ -91,6 +91,22 @@ def main() -> None:
     rec = sum(s["selection_recovered"] for s in wq.values())
     print(f"wave_quantization,{dt:.1f},"
           f"max_model_dip={100*max(dips):.0f}%_recovered={rec}/{n_wq}")
+
+    # §Fidelity — %-of-exhaustive-oracle per preset (calib subsystem).
+    # Exhaustive candidate pricing is minutes per GPU preset at full scale,
+    # so the harness scales the shapes down outside --full; the full-scale
+    # sweep is the calibration-smoke CI artifact / nightly assertion.
+    t0 = time.perf_counter()
+    mf = model_fidelity.run(smoke=not args.full, full=args.full,
+                            verbose=False)
+    n_mf = sum(s["n"] for s in mf["presets"].values())
+    dt = (time.perf_counter() - t0) / max(n_mf, 1) * 1e6
+    worst = min(s["worst_fidelity"] for s in mf["presets"].values())
+    mean = (sum(s["mean_fidelity"] * s["n"]
+                for s in mf["presets"].values()) / max(n_mf, 1))
+    print(f"model_fidelity,{dt:.1f},"
+          f"mean={100*mean:.1f}%_worst={100*worst:.1f}%_"
+          f"presets={len(mf['presets'])}")
 
     # Fig. 4 — percent of peak vs arithmetic intensity.
     t0 = time.perf_counter()

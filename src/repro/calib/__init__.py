@@ -1,0 +1,35 @@
+"""Calibration & model-fidelity subsystem (DESIGN.md §8).
+
+Closes the loop between the analytical model and the hardware it claims to
+predict, in three layers:
+
+* **probes** (``probes.py``) — microbenchmark sweeps against a
+  :class:`~repro.calib.device.Device` (real jax execution, or the event
+  simulator wrapped as a deterministic :class:`VirtualDevice` for CI);
+* **fit** (``fit.py``) — robust fits from probe measurements to
+  :class:`~repro.core.topology.Topology` constants, serialized as
+  calibrated-topology JSON artifacts with full provenance;
+* **oracle** (``oracle.py``) — the exhaustive-autotune harness measuring
+  the paper's headline fidelity number: % of the empirical optimum the
+  zero-autotune analytical selection achieves, per preset x shape sweep.
+
+Entry points: ``repro.core.hardware.calibrate(base, device=...)``,
+``tools/fit_topology.py`` (CLI), ``benchmarks/model_fidelity.py``.
+"""
+from repro.calib.device import Device, JaxDevice, VirtualDevice, get_device
+from repro.calib.fit import CalibrationResult, fit_topology, theil_sen
+from repro.calib.oracle import (OracleRow, fidelity_report, fidelity_row,
+                                fidelity_sweep, oracle_best,
+                                scaled_llama3_shapes)
+from repro.calib.probes import (ProbeSweep, level_windows, probe_compute,
+                                probe_issue, probe_latency,
+                                probe_stream_levels, probe_wave, run_probes)
+
+__all__ = [
+    "Device", "JaxDevice", "VirtualDevice", "get_device",
+    "CalibrationResult", "fit_topology", "theil_sen",
+    "OracleRow", "fidelity_report", "fidelity_row", "fidelity_sweep",
+    "oracle_best", "scaled_llama3_shapes",
+    "ProbeSweep", "level_windows", "probe_compute", "probe_issue",
+    "probe_latency", "probe_stream_levels", "probe_wave", "run_probes",
+]

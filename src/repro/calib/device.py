@@ -1,0 +1,235 @@
+"""Device abstraction for the calibration probes (DESIGN.md §8).
+
+A :class:`Device` exposes the four primitives the probe layer times:
+
+* ``stream_time``  — stream ``nbytes`` cyclically through a ``window``-byte
+  working set in ``n_chunks`` fetches (per-level bandwidth / latency /
+  issue-cost probes);
+* ``compute_time`` — ``n_atoms`` back-to-back matrix macro-atoms on
+  resident operands (peak issue rate per dtype);
+* ``wave_time``    — ``n_units`` identical compute-only units launched as a
+  grid (occupancy staircase: core count, launch overhead, and the static
+  bandwidth/compute-share term of the occupancy stage);
+* ``gemm_time``    — one full GEMM under an explicit ``TileConfig`` (the
+  exhaustive-autotune oracle's per-candidate measurement).
+
+Two implementations:
+
+* :class:`VirtualDevice` wraps ``core/simulator.py`` around a *planted*
+  topology: fully deterministic (optionally with seeded multiplicative
+  noise to exercise the robust-fit path), so the whole probe → fit → oracle
+  pipeline is CI-testable — the fit must recover the planted constants.
+* :class:`JaxDevice` times real jax executions on whatever backend jax
+  sees.  On an actual accelerator these are meaningful microbenchmarks; on
+  the CPU container they execute (tiny sizes, used by smoke tests for the
+  code path only) but the numbers describe the host, not a TPU/GPU.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core.latency import GemmProblem, TileConfig
+from repro.core.simulator import (simulate_compute, simulate_gemm,
+                                  simulate_stream, simulate_wave)
+from repro.core.topology import Topology
+
+
+@runtime_checkable
+class Device(Protocol):
+    """What the probe layer needs from a machine under calibration."""
+
+    name: str
+
+    def stream_time(self, nbytes: float, window: int,
+                    n_chunks: int) -> float: ...
+
+    def compute_time(self, dtype: str, n_atoms: int,
+                     n_parallel: int = 1) -> float: ...
+
+    def wave_time(self, n_units: int, unit_atoms: int,
+                  dtype: str) -> float: ...
+
+    def gemm_time(self, p: GemmProblem, t: TileConfig) -> float: ...
+
+
+class VirtualDevice:
+    """The simulator wrapped as a deterministic device.
+
+    ``planted`` is the ground-truth topology whose constants the probes
+    observe; the fit pipeline starts from a *different* (or identical) base
+    preset and must recover them.  ``noise`` adds a deterministic
+    multiplicative jitter in ``[-noise, +noise]`` derived from a hash of
+    the call arguments (stable across call order and processes), so the
+    least-squares fits are exercised against imperfect measurements
+    without flaky tests.
+    """
+
+    def __init__(self, planted: Topology, *, noise: float = 0.0,
+                 seed: int = 0):
+        self.planted = planted
+        self.noise = float(noise)
+        self.seed = int(seed)
+        self.name = f"virtual:{planted.name}"
+
+    def _jitter(self, *key) -> float:
+        if not self.noise:
+            return 1.0
+        h = hashlib.md5(repr((self.seed,) + key).encode()).digest()
+        u = int.from_bytes(h[:8], "big") / float(1 << 64)    # [0, 1)
+        return 1.0 + self.noise * (2.0 * u - 1.0)
+
+    def stream_time(self, nbytes: float, window: int,
+                    n_chunks: int) -> float:
+        t = simulate_stream(self.planted, nbytes, window, n_chunks)
+        return t * self._jitter("stream", nbytes, window, n_chunks)
+
+    def compute_time(self, dtype: str, n_atoms: int,
+                     n_parallel: int = 1) -> float:
+        # simulate_compute retires atoms at the full chip rate, so the
+        # parallelism hint is already implied (jitter key excludes it).
+        t = simulate_compute(self.planted, dtype, n_atoms)
+        return t * self._jitter("compute", dtype, n_atoms)
+
+    def wave_time(self, n_units: int, unit_atoms: int,
+                  dtype: str) -> float:
+        t = simulate_wave(self.planted, n_units, unit_atoms, dtype)
+        return t * self._jitter("wave", n_units, unit_atoms, dtype)
+
+    def gemm_time(self, p: GemmProblem, t: TileConfig) -> float:
+        # The oracle's per-candidate price: the event-level simulator, which
+        # shares no scoring logic with the closed-form model it judges.
+        return simulate_gemm(p, t, self.planted).time
+
+
+class JaxDevice:
+    """Real-execution device: times jitted jax computations.
+
+    Sizes are the caller's problem — the probe layer scales them from the
+    base topology's declared capacities.  All timings are best-of-``repeat``
+    wall clock around ``block_until_ready`` after one warm-up call (compile
+    time excluded).
+    """
+
+    def __init__(self, repeat: int = 3, backend: Optional[str] = None):
+        import jax
+        self._jax = jax
+        self.repeat = int(repeat)
+        dev = jax.devices(backend)[0] if backend else jax.devices()[0]
+        self._device = dev
+        self.name = f"jax:{dev.platform}:{getattr(dev, 'device_kind', '?')}"
+
+    def _time(self, fn, *args) -> float:
+        out = fn(*args)
+        self._jax.block_until_ready(out)               # warm-up / compile
+        best = float("inf")
+        for _ in range(self.repeat):
+            t0 = time.perf_counter()
+            self._jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def stream_time(self, nbytes: float, window: int,
+                    n_chunks: int) -> float:
+        import jax
+        import jax.numpy as jnp
+        elems = max(int(window) // 4, 1)               # f32 working set
+        chunks = max(int(n_chunks), 1)
+        # Elements per fetch so chunks fetches move ~nbytes total, cycling
+        # through the window.  Each iteration dynamic-slices at a start
+        # that depends on the loop counter and folds the read into the
+        # carried accumulator — neither hoistable nor dead-code-eliminable,
+        # so the sweep's nbytes AND n_chunks axes are both honored (the
+        # issue probe's slope is d(time)/d(n_chunks)).
+        chunk = min(max(int(nbytes / 4) // chunks, 1), elems)
+        span = max(elems - chunk + 1, 1)
+        x = jnp.arange(elems, dtype=jnp.float32)
+
+        @jax.jit
+        def read(x):
+            def body(i, acc):
+                s = jax.lax.dynamic_slice(x, ((i * chunk) % span,),
+                                          (chunk,))
+                return acc + s.sum()
+            return jax.lax.fori_loop(0, chunks, body, jnp.float32(0))
+
+        return self._time(read, x)
+
+    @staticmethod
+    def _dot_dtypes(dtype: str):
+        """(operand dtype, accumulator dtype) for a timing chain in the
+        *requested* dtype — the probe measures that dtype's issue rate, so
+        operands must stay in it every iteration (the wide accumulate is
+        cast back; a d x d cast is noise next to the d^3 MACs)."""
+        import jax.numpy as jnp
+        jd = jnp.dtype(dtype)
+        wide = jnp.float32 if jnp.issubdtype(jd, jnp.floating) else jnp.int32
+        return jd, wide
+
+    def compute_time(self, dtype: str, n_atoms: int,
+                     n_parallel: int = 1) -> float:
+        import jax
+        import jax.numpy as jnp
+        d = 128                                        # resident macro-atom
+        jd, wide = self._dot_dtypes(dtype)
+        # The fit reads the slope as the CHIP-wide issue rate (the virtual
+        # device's convention), so the atoms must be spread over enough
+        # independent chains to occupy every core — one serial dependent
+        # chain would measure a single core's rate, ~C x too slow on
+        # multi-core chips.  ``n_parallel`` comes from the probe layer
+        # (the base preset's declared core count).
+        lanes = max(int(n_parallel), 1)
+        per_lane = max(n_atoms // lanes, 1)
+        a = jnp.ones((lanes, d, d), dtype=jd)
+
+        @jax.jit
+        def chains(a):
+            def lane(x):
+                def body(_, acc):
+                    return jnp.dot(acc, x,
+                                   preferred_element_type=wide).astype(jd)
+                return jax.lax.fori_loop(0, per_lane, body, x)
+            return jax.vmap(lane)(a).sum()
+
+        return self._time(chains, a)
+
+    def wave_time(self, n_units: int, unit_atoms: int,
+                  dtype: str) -> float:
+        import jax
+        import jax.numpy as jnp
+        d = 128
+        jd, wide = self._dot_dtypes(dtype)
+        a = jnp.ones((n_units, d, d), dtype=jd)
+
+        @jax.jit
+        def grid(a):
+            def unit(x):
+                def body(_, acc):
+                    return jnp.dot(acc, x,
+                                   preferred_element_type=wide).astype(jd)
+                return jax.lax.fori_loop(0, unit_atoms, body, x)
+            return jax.vmap(unit)(a).sum()
+
+        return self._time(grid, a)
+
+    def gemm_time(self, p: GemmProblem, t: TileConfig) -> float:
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        a = jnp.ones((p.M, p.K), dtype=jnp.dtype(p.in_dtype))
+        b = jnp.ones((p.K, p.N), dtype=jnp.dtype(p.in_dtype))
+        return self._time(
+            lambda a, b: ops.matmul(a, b, out_dtype=p.out_dtype, config=t),
+            a, b)
+
+
+def get_device(kind: str, base: Topology, *, noise: float = 0.0,
+               seed: int = 0, planted: Optional[Topology] = None) -> Device:
+    """Device factory for the CLI / benchmarks: ``virtual`` wraps the
+    simulator around ``planted`` (default: the base preset itself — the
+    self-consistency check), ``jax`` measures real executions."""
+    if kind == "virtual":
+        return VirtualDevice(planted or base, noise=noise, seed=seed)
+    if kind == "jax":
+        return JaxDevice()
+    raise ValueError(f"unknown device kind {kind!r}; choose virtual | jax")

@@ -1,0 +1,208 @@
+"""Microbenchmark probes: the measurement layer of calibration (DESIGN.md §8).
+
+Each probe runs a sweep of one :class:`~repro.calib.device.Device`
+primitive and returns a :class:`ProbeSweep` — the raw ``(x, seconds)``
+samples plus the fixed parameters, which the fit layer turns into Topology
+constants and which land verbatim in the calibrated-topology artifact's
+provenance.  Probes never fit; fits never measure.
+
+The sweeps, and what their slopes/intercepts mean (``fit.py``):
+
+* ``stream:<level>`` — nbytes sweep at a *fixed* reuse window targeting one
+  memory level (bigger than every inner level's budget, within the target's)
+  with a fixed chunk count, so ``d(time)/d(nbytes) = 1/bandwidth(level)``.
+* ``latency`` — single-pass small transfers (``window == nbytes``,
+  one chunk): the intercept isolates launch + first-byte latency.
+* ``issue`` — chunk-count sweep at fixed bytes/window:
+  ``d(time)/d(n_chunks) = dma_fixed``.
+* ``compute:<dtype>`` — macro-atom count sweep on resident operands:
+  ``d(time)/d(n_atoms) = atom_flops / peak_flops[dtype]``.
+* ``wave`` — work-unit sweep in exact multiples of the declared core count:
+  ``d(time)/d(waves)`` is the per-wave unit time under the occupancy
+  stage's *static* 1/C bandwidth-share simplification, and the intercept is
+  ``kernel_launch``.  Two extra off-staircase samples (C and C+1 units)
+  record the tail-wave cliff itself.
+
+Window targeting walks the declared capacity chain — capacities and core
+counts are structural datasheet facts; calibration measures *rates*
+(paper §V-E: retarget by swapping measured constants only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.calib.device import Device
+from repro.core.topology import Topology, reference_dtype
+
+# Target wall times per sweep point.  Sweep sizes (bytes, atoms, chunk
+# counts) are derived from these and the *base* preset's order-of-magnitude
+# constants, so every probe's signal dwarfs launch overhead and measurement
+# noise on machines of any speed — a fixed atom count that keeps a TPU busy
+# for 20 us vanishes inside the launch jitter of a chip with 16^3 atoms.
+# Sizing only needs the preset to be right to an order of magnitude; the
+# fit replaces the constants with what was measured.
+STREAM_TARGETS_S = (50e-6, 100e-6, 200e-6, 400e-6, 800e-6)
+LATENCY_TARGETS_S = (0.5e-6, 1e-6, 1.5e-6, 2e-6, 3e-6, 4e-6)
+ISSUE_TARGETS_S = (6.25e-6, 12.5e-6, 25e-6, 50e-6)
+COMPUTE_TARGETS_S = (20e-6, 40e-6, 80e-6, 160e-6)
+WAVE_UNIT_TARGET_S = 5e-6
+WAVE_MULTIPLES = (1, 2, 3, 4, 5, 6, 7, 8)  # x total_cores -> exact waves
+
+
+@dataclass(frozen=True)
+class ProbeSweep:
+    """One probe's raw measurements: ``samples[i] = (x_i, seconds_i)``."""
+
+    kind: str                 # stream | latency | issue | compute | wave
+    target: str               # stream/latency: level name; compute/wave:
+                              # dtype; "" for machine-wide (issue)
+    params: Dict[str, float]  # fixed sweep parameters
+    samples: Tuple[Tuple[float, float], ...]
+
+    def xs(self) -> List[float]:
+        return [x for x, _ in self.samples]
+
+    def ys(self) -> List[float]:
+        return [y for _, y in self.samples]
+
+    def to_dict(self) -> Dict:
+        return {"kind": self.kind, "target": self.target,
+                "params": dict(self.params),
+                "samples": [list(s) for s in self.samples]}
+
+
+def level_windows(base: Topology) -> List[Tuple[int, str, int]]:
+    """(level index, name, reuse-window bytes) targeting each probeable
+    level of the chain, innermost first, backing memory last.
+
+    A window targets level ℓ when it exceeds the budget of every level
+    *inner* than ℓ (so nearer levels cannot serve the re-touches) while
+    fitting ℓ's own budget.  A cache whose budget does not leave room above
+    its inner neighbours (a budget inversion) is reported unprobeable by
+    omission — the fit keeps its preset bandwidth."""
+    out: List[Tuple[int, str, int]] = []
+    levels = base.levels
+    for i in range(len(levels) - 1, 0, -1):           # innermost first
+        inner = max((l.budget() for l in levels[i + 1:]), default=0)
+        budget = levels[i].budget()
+        window = min(budget, 2 * inner) if inner else max(budget // 2, 1)
+        if window <= inner:
+            continue                                   # budget inversion
+        out.append((i, levels[i].name, window))
+    inner = max((l.budget() for l in levels[1:]), default=1)
+    out.append((0, levels[0].name, 2 * inner))         # backing: spills all
+    return out
+
+
+def probe_stream_levels(device: Device, base: Topology, *,
+                        n_chunks: int = 64,
+                        targets: Sequence[float] = STREAM_TARGETS_S,
+                        ) -> Dict[str, ProbeSweep]:
+    """Per-level bandwidth sweeps: fixed window, nbytes varied.  nbytes per
+    point is sized from the level's *preset* bandwidth to hit the target
+    wall times (a KB-scale window needs hundreds of thousands of passes
+    before its port time is visible over launch overhead)."""
+    out: Dict[str, ProbeSweep] = {}
+    for idx, name, window in level_windows(base):
+        bw = base.levels[idx].bandwidth
+        samples = tuple(
+            (nb, device.stream_time(nb, window, n_chunks))
+            for nb in (float(max(2 * window, int(T * bw)))
+                       for T in targets))
+        out[f"stream:{name}"] = ProbeSweep(
+            kind="stream", target=name,
+            params={"window": window, "n_chunks": n_chunks},
+            samples=samples)
+    return out
+
+
+def probe_latency(device: Device, base: Topology,
+                  targets: Sequence[float] = LATENCY_TARGETS_S) -> ProbeSweep:
+    """Single-pass small transfers: ``window == nbytes``, one chunk — the
+    intercept over nbytes is launch + first-byte latency + issue cost.
+    Transfers are kept small (sub-launch-scale) so the intercept
+    extrapolation stays short."""
+    bw = base.backing.bandwidth
+    samples = tuple(
+        (nb, device.stream_time(nb, int(nb), 1))
+        for nb in (float(max(int(T * bw), 1)) for T in targets))
+    return ProbeSweep(kind="latency", target=base.backing.name,
+                      params={"n_chunks": 1}, samples=samples)
+
+
+def probe_issue(device: Device, base: Topology,
+                targets: Sequence[float] = ISSUE_TARGETS_S) -> ProbeSweep:
+    """DMA-issue cost: chunk-count sweep at fixed (small) bytes and window
+    so the constant byte term stays small next to the issue term.  Chunk
+    counts are sized from the preset ``dma_fixed``."""
+    window = max(base.staging.budget() // 2, 1)
+    nbytes = float(2 * window)
+    dma = base.dma_fixed or 1e-9
+    chunks = sorted({max(1, int(T / dma)) for T in targets})
+    samples = tuple(
+        (float(c), device.stream_time(nbytes, window, c)) for c in chunks)
+    return ProbeSweep(kind="issue", target="",
+                      params={"window": window, "nbytes": nbytes},
+                      samples=samples)
+
+
+def probe_compute(device: Device, base: Topology, dtype: str,
+                  targets: Sequence[float] = COMPUTE_TARGETS_S) -> ProbeSweep:
+    """Issue-rate sweep for one dtype: n resident macro-atoms back-to-back,
+    n sized from the preset peak to hit the target wall times."""
+    mm, mn, mk = base.mxu_shape
+    atom_flops = 2.0 * mm * mn * mk
+    peak = base.flops(dtype)
+    lanes = base.total_cores()      # chip-wide rate needs every core busy
+    samples = tuple(
+        (float(n), device.compute_time(dtype, n, lanes))
+        for n in (max(16 * lanes, int(T * peak / atom_flops))
+                  for T in targets))
+    return ProbeSweep(kind="compute", target=dtype,
+                      params={"mxu_m": mm, "mxu_n": mn, "mxu_k": mk,
+                              "n_parallel": lanes},
+                      samples=samples)
+
+
+def _wave_unit_atoms(base: Topology) -> int:
+    """Atoms per wave unit sized so one wave ~ WAVE_UNIT_TARGET_S."""
+    mm, mn, mk = base.mxu_shape
+    atom_flops = 2.0 * mm * mn * mk
+    ref = reference_dtype(base.peak_flops)
+    return max(16, int(WAVE_UNIT_TARGET_S * base.peak_flops[ref]
+                       / (atom_flops * base.total_cores())))
+
+
+def probe_wave(device: Device, base: Topology, *,
+               unit_atoms: Optional[int] = None,
+               multiples: Sequence[int] = WAVE_MULTIPLES) -> ProbeSweep:
+    """Wave-latency staircase: unit counts in exact multiples of the
+    declared core count (x == wave count), plus the C / C+1 cliff pair."""
+    if unit_atoms is None:
+        unit_atoms = _wave_unit_atoms(base)
+    C = base.total_cores()
+    ref = reference_dtype(base.peak_flops)
+    samples = [(float(k), device.wave_time(k * C, unit_atoms, ref))
+               for k in multiples]
+    cliff = ((float(C), device.wave_time(C, unit_atoms, ref)),
+             (float(C + 1), device.wave_time(C + 1, unit_atoms, ref)))
+    return ProbeSweep(kind="wave", target=ref,
+                      params={"unit_atoms": unit_atoms, "cores": C,
+                              "cliff_units": C,
+                              "cliff_before_s": cliff[0][1],
+                              "cliff_after_s": cliff[1][1]},
+                      samples=tuple(samples))
+
+
+def run_probes(device: Device, base: Topology, *,
+               dtypes: Optional[Sequence[str]] = None,
+               ) -> Dict[str, ProbeSweep]:
+    """The full probe suite for one device against one base topology."""
+    sweeps = probe_stream_levels(device, base)
+    sweeps["latency"] = probe_latency(device, base)
+    sweeps["issue"] = probe_issue(device, base)
+    for dt in (dtypes if dtypes is not None else sorted(base.peak_flops)):
+        sweeps[f"compute:{dt}"] = probe_compute(device, base, dt)
+    sweeps["wave"] = probe_wave(device, base)
+    return sweeps

@@ -22,7 +22,8 @@ Preset families (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Mapping
+import math
+from typing import Callable, Dict, Mapping, Optional
 
 from repro.core.dtypes import DTYPE_BYTES  # re-export (legacy import path)
 from repro.core.topology import (
@@ -35,7 +36,7 @@ from repro.core.topology import (
 __all__ = [
     "DTYPE_BYTES", "HardwareSpec", "MemoryLevel", "Topology",
     "TPU_V5E", "TPU_V5P", "TPU_V4", "GPU_MI300X_LIKE", "GPU_H100_LIKE",
-    "PRESETS", "get_hardware", "calibrate",
+    "PRESETS", "get_hardware", "calibrate", "validate_measured",
 ]
 
 # ---------------------------------------------------------------------------
@@ -129,10 +130,16 @@ GPU_MI300X_LIKE = Topology(
     levels=(
         MemoryLevel(name="hbm", capacity=192 * 1024**3, bandwidth=5.3e12,
                     latency=8.0e-7, scope="device"),
+        # Cache levels carry budget_fraction < 1: a shared cache never
+        # gives one kernel its full capacity (conflict misses, other
+        # streams), so reuse windows within ~25% of nominal capacity are
+        # treated as spills — keeps the closed-form ideal-LRU windows and
+        # the simulator's byte-clock distance proxy agreeing at the
+        # residency boundary (the fidelity harness's marginal cases).
         MemoryLevel(name="mall", capacity=256 * 1024**2, bandwidth=14.0e12,
-                    scope="device"),                     # Infinity Cache
+                    scope="device", budget_fraction=0.75),  # Infinity Cache
         MemoryLevel(name="l2", capacity=4 * 1024**2, bandwidth=25.0e12,
-                    scope="partition"),                  # 4 MiB per XCD
+                    scope="partition", budget_fraction=0.75),  # 4MiB per XCD
         MemoryLevel(name="lds", capacity=64 * 1024, bandwidth=80.0e12,
                     scope="core"),                       # 64 KiB per CU
     ),
@@ -166,8 +173,9 @@ GPU_H100_LIKE = Topology(
     levels=(
         MemoryLevel(name="hbm", capacity=80 * 1024**3, bandwidth=3.35e12,
                     latency=7.0e-7, scope="device"),
+        # budget_fraction < 1: see the MI300X-like preset note.
         MemoryLevel(name="l2", capacity=50 * 1024**2, bandwidth=12.0e12,
-                    scope="device"),
+                    scope="device", budget_fraction=0.75),
         MemoryLevel(name="smem", capacity=228 * 1024, bandwidth=30.0e12,
                     scope="core"),                       # 228 KiB per SM
     ),
@@ -202,25 +210,94 @@ def get_hardware(name: str) -> Topology:
         raise KeyError(f"unknown hardware {name!r}; presets: {sorted(PRESETS)}")
 
 
+# Numeric calibration fields that must be strictly positive — a measured
+# rate/size of zero (or below) means the microbenchmark failed, and feeding
+# it onward would either crash MemoryLevel validation with an unhelpful
+# message or (worse, e.g. peak_flops) silently poison every selection.
+# Everything else numeric (latencies, fixed overheads, ici terms) may
+# legitimately measure 0.0 but never negative or NaN.
+_POSITIVE_MARKERS = ("bandwidth", "bytes", "capacity", "fraction", "flops")
+_POSITIVE_FIELDS = frozenset(
+    {"partitions", "core_count", "pipeline_depth", "lane_width",
+     "sublane_f32"})
+
+
+def validate_measured(field_name: str, value) -> None:
+    """Reject a non-finite / non-positive measured value with an error that
+    names the offending field — shared by :func:`calibrate` (hand-supplied
+    microbenchmarks) and the ``repro.calib`` fit pipeline (fitted values).
+
+    Non-numeric calibration payloads (``levels`` tuples, menus, names) pass
+    through; ``peak_flops`` mappings are validated per dtype entry."""
+    if isinstance(value, Mapping):
+        for k, v in value.items():
+            validate_measured(f"{field_name}.{k}", v)
+        return
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        return
+    if not math.isfinite(value):
+        raise ValueError(
+            f"calibration for field {field_name!r} measured a non-finite "
+            f"value ({value!r}); the microbenchmark failed — refusing to "
+            f"build a topology from it")
+    base = field_name.rsplit(".", 1)[-1]
+    needs_positive = (base in _POSITIVE_FIELDS
+                      or any(m in field_name for m in _POSITIVE_MARKERS))
+    if needs_positive and value <= 0:
+        raise ValueError(
+            f"calibration for field {field_name!r} measured a non-positive "
+            f"value ({value!r}); rates, capacities and fractions must be "
+            f"> 0 — the microbenchmark failed")
+    if not needs_positive and value < 0:
+        raise ValueError(
+            f"calibration for field {field_name!r} measured a negative "
+            f"value ({value!r}); overheads/latencies must be >= 0")
+
+
 def calibrate(
     base: Topology,
-    microbenchmarks: Mapping[str, Callable[[], float]],
+    microbenchmarks: Optional[Mapping[str, Callable[[], float]]] = None,
+    *,
+    device=None,
+    **fit_kwargs,
 ) -> Topology:
-    """Lightweight calibration hook (paper contribution #2).
+    """Calibration entry point (paper contribution #2 / §V-E retargeting).
 
-    ``microbenchmarks`` maps field names — real :class:`Topology` fields or
-    the legacy flat aliases (``hbm_bandwidth`` …) — to zero-arg callables
-    that return a measured rate (e.g. a stream benchmark for hbm_bandwidth).
-    Unknown names raise ``KeyError`` listing what is calibratable.  On real
-    hardware these run once at install time; in this CPU container we use
-    the published constants and this remains the documented entry point.
+    Two modes:
+
+    * ``microbenchmarks`` maps field names — real :class:`Topology` fields
+      or the legacy flat aliases (``hbm_bandwidth`` …) — to zero-arg
+      callables returning a measured value.  Unknown names raise
+      ``KeyError`` listing what is calibratable; non-finite or
+      non-positive measurements raise ``ValueError`` naming the field
+      (:func:`validate_measured`).
+    * ``device`` (a :class:`repro.calib.device.Device`) delegates to the
+      full probe → fit pipeline (``repro.calib.fit.fit_topology``), which
+      measures per-level stream bandwidths, per-dtype issue rates, and the
+      wave/launch/issue overheads, returning the fitted topology.  Pass
+      ``fit_kwargs`` (e.g. ``dtypes=...``) through to the fit.  Use
+      ``repro.calib.fit.fit_topology`` directly when you also want the
+      provenance artifact.
     """
+    if device is not None:
+        if microbenchmarks:
+            raise ValueError(
+                "pass either microbenchmarks or device=, not both")
+        from repro.calib.fit import fit_topology
+        return fit_topology(base, device, **fit_kwargs).topology
+    if microbenchmarks is None:
+        raise ValueError(
+            "calibrate() needs either a microbenchmarks mapping or a "
+            "device= to probe; calling it with neither would silently "
+            "return the uncalibrated preset")
     known = calibration_field_names(base)
     measured = {}
-    for field_name, bench in microbenchmarks.items():
+    for field_name, bench in (microbenchmarks or {}).items():
         if field_name not in known:
             raise KeyError(
                 f"not a calibratable field: {field_name!r}; "
                 f"known: {sorted(known)}")
-        measured[field_name] = bench()
+        value = bench()
+        validate_measured(field_name, value)
+        measured[field_name] = value
     return base.with_calibration(**measured)

@@ -19,13 +19,14 @@ import json
 import os
 import tempfile
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.hardware import TPU_V5E
-from repro.core.topology import SCHEDULES, HardwareSpec
+from repro.core.topology import (SCHEDULES, HardwareSpec,
+                                 topology_fingerprint)
 from repro.core.latency import (
     EPILOGUE_NONE,
     Epilogue,
@@ -399,17 +400,39 @@ def _key_str(key: Tuple) -> str:
     return repr(key)
 
 
-def _topo_fingerprint(hw: HardwareSpec) -> str:
-    """Content fingerprint of everything the selection depends on — levels
-    (capacities AND rates), compute rates, menus, overheads.  Persisted
-    with each disk entry so a recalibrated same-name topology invalidates
-    the old selections instead of warm-starting from them."""
-    ident = (hw.levels, hw.mxu_shape, tuple(sorted(hw.peak_flops.items())),
-             hw.bm_menu, hw.bn_menu, hw.bk_menu, hw.split_k_menu,
-             hw.group_m_menu, hw.schedule_menu, hw.partitions,
-             hw.core_count, hw.dma_fixed, hw.kernel_launch,
-             hw.pipeline_depth, hw.lane_width, hw.sublane_f32)
-    return hashlib.md5(repr(ident).encode()).hexdigest()[:16]
+# Persisted with each disk entry so a recalibrated same-name topology
+# invalidates the old selections instead of warm-starting from them.  The
+# fingerprint function itself lives in core/topology.py (the calibration
+# subsystem stamps it into calibrated-topology artifacts); this alias is
+# the historical in-module name.
+_topo_fingerprint = topology_fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Selection observability hooks (calibration subsystem, DESIGN.md §8).
+#
+# The oracle/fidelity harness and the calibration tests need to observe
+# *where* each selection came from — fresh cold scoring ("cold"), the
+# persistent disk table ("disk"), or the in-process memo ("memo") — to
+# prove end-to-end that e.g. a recalibrated topology really re-scored
+# instead of warm-starting stale configs.  Hooks must not raise.
+# ---------------------------------------------------------------------------
+
+_SELECTION_HOOKS: List[Callable[["Selection", str], None]] = []
+
+
+def add_selection_hook(fn: Callable[["Selection", str], None]) -> None:
+    """Register ``fn(selection, source)``; source in {memo, disk, cold}."""
+    _SELECTION_HOOKS.append(fn)
+
+
+def remove_selection_hook(fn: Callable[["Selection", str], None]) -> None:
+    _SELECTION_HOOKS.remove(fn)
+
+
+def _emit_selection(sel: "Selection", source: str) -> None:
+    for fn in list(_SELECTION_HOOKS):
+        fn(sel, source)
 
 
 def load_selection_cache(path: Optional[str] = None) -> int:
@@ -542,8 +565,15 @@ def select_gemm_config(
     ep = epilogue or EPILOGUE_NONE
     key = (M, N, K, in_dtype, out_dtype, batch, ep, hw.name,
            allow_split_k, allow_grouping)
-    hit = _CACHE.get(key)
+    # The in-process memo carries the content fingerprint on top of the
+    # disk key: a calibrated topology served under its preset name in the
+    # SAME process must cold-rescore, exactly like the disk table's
+    # per-entry fingerprint forces across processes.  The fingerprint is
+    # identity-memoized on the Topology, so a memo hit stays O(1).
+    memo_key = key + (topology_fingerprint(hw),)
+    hit = _CACHE.get(memo_key)
     if hit is not None:
+        _emit_selection(hit, "memo")
         return hit
 
     p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
@@ -567,7 +597,8 @@ def select_gemm_config(
             sel = Selection(problem=p, config=best,
                             predicted=gemm_latency(p, best, hw),
                             hardware=hw.name, n_candidates=n_cands)
-            _CACHE[key] = sel
+            _CACHE[memo_key] = sel
+            _emit_selection(sel, "disk")
             return sel
     # Fast O(P) scoring pass (Table II claim): enumeration, filtering and
     # scoring are all one numpy batch — only the winning TileConfig is ever
@@ -576,8 +607,9 @@ def select_gemm_config(
                                 allow_grouping=allow_grouping)
     sel = Selection(problem=p, config=best, predicted=gemm_latency(p, best, hw),
                     hardware=hw.name, n_candidates=n_cands)
-    _CACHE[key] = sel
+    _CACHE[memo_key] = sel
     _disk_record(key, sel, hw)
+    _emit_selection(sel, "cold")
     return sel
 
 

@@ -12,27 +12,34 @@ the machine at a strictly finer granularity than the closed-form model in
   (grouped or row-major, k innermost),
 * an explicit two-stage max-plus pipeline recurrence with finite buffer depth
   (``hw.pipeline_depth``), not a steady-state max(),
-* output writebacks serialized on the same DMA engine as input fetches,
+* output writebacks consume the same DMA-engine port capacity as input
+  fetches but do not stall queued fetches behind the tile's compute (a
+  reordering DMA queue never idles with work pending; completion is
+  tracked separately and carries the accumulate data dependency),
 * in-kernel split-K: the grid is ``(tiles, sk, Tk)`` and the f32 accumulator
   carries across all of a tile's k-shards, so there is no HBM partial buffer
   and no combine pass — only the per-shard K padding,
 * fused epilogue operands (bias / gate / residual) fetched once per output
   tile at the flush,
 * per-level byte counters on multi-level topologies: each re-fetched
-  operand panel's *measured* reuse distance (bytes streamed since its last
-  use, an LRU stack-distance proxy) decides which cache level serves it —
-  event-by-event, not the latency model's closed-form windows — and the
-  fetch is timed at that level's bandwidth,
+  operand panel's *measured* reuse distance decides which cache level
+  serves it — event-by-event, not the latency model's closed-form windows
+  — and the fetch is timed at that level's bandwidth (single-core: bytes
+  streamed since last use, an upper-bound stack-distance proxy;
+  multi-core: the exact LRU stack distance over distinct panels),
 * multi-core topologies (``Topology.total_cores() > 1``): work units are
   scheduled round-robin over the cores — one (tile, k-shard) per unit under
   ``data_parallel``, contiguous k-step strips under ``stream_k`` — so the
   measured wave count (max units on any core) cross-checks the closed-form
-  Alg. 4 wave model; reuse distances are measured against a chip-wide byte
-  clock for device-scoped caches and per-partition clocks for
-  partition-scoped ones (cores are blocked per partition within a wave);
-  data-parallel split-K shards write block partials that a per-tile combine
-  re-reads, and stream-K strips pay a partial fixup at every strip boundary
-  that is not tile-aligned — mirroring the schedules the model prices.
+  Alg. 4 wave model; reuse distances are measured against a chip-wide LRU
+  for device-scoped caches and per-partition LRUs for partition-scoped
+  ones (cores are blocked per partition within a wave); each memory port's
+  bandwidth is shared over the cores actually fetching from it within a
+  wave (fetch-stream population — the uniform-mixing limit of which is the
+  closed-form model's per-level convention); data-parallel split-K shards
+  write block partials that a per-tile combine re-reads, and stream-K
+  strips pay a partial fixup at every strip boundary that is not
+  tile-aligned — mirroring the schedules the model prices.
 
 It shares nothing with ``latency.py`` but the Topology constants.
 
@@ -46,13 +53,76 @@ benchmarks tractable on CPU.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Mapping, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Tuple
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.latency import GemmProblem, TileConfig, cdiv
-from repro.core.topology import HardwareSpec, MemoryLevel
+from repro.core.topology import HardwareSpec, MemoryLevel, reference_dtype
 
 _EXPLICIT = 3  # pipeline steps simulated exactly at each tile start
+
+
+class _LruStack:
+    """Exact LRU stack distances over a stream of (key, bytes) uses.
+
+    The stack distance of a key is the summed size of the DISTINCT keys
+    touched since its last use — the residency criterion of an ideal
+    fully-associative LRU cache (repeat fetches of the same panel do not
+    grow the working set).  Implemented as a Fenwick tree over the use
+    order so both ``use`` and ``distance`` are O(log n): each key holds
+    one live slot at its last-use position; moving a key re-zeroes its old
+    slot and appends a new one."""
+
+    __slots__ = ("tree", "n", "cursor", "total", "pos", "size")
+
+    def __init__(self, n_slots: int = 1024):
+        self.n = max(n_slots, 16)
+        self.tree = [0.0] * (self.n + 1)
+        self.cursor = 0
+        self.total = 0.0
+        self.pos: Dict = {}
+        self.size: Dict = {}
+
+    def _add(self, i: int, v: float) -> None:
+        while i <= self.n:
+            self.tree[i] += v
+            i += i & -i
+
+    def _prefix(self, i: int) -> float:
+        s = 0.0
+        while i > 0:
+            s += self.tree[i]
+            i -= i & -i
+        return s
+
+    def distance(self, key):
+        """Bytes of distinct keys used strictly after ``key``'s last use,
+        or None if the key was never used."""
+        p = self.pos.get(key)
+        if p is None:
+            return None
+        return self.total - self._prefix(p)
+
+    def use(self, key, bytes_: float) -> None:
+        p = self.pos.pop(key, None)
+        if p is not None:
+            old = self.size.pop(key)
+            self._add(p, -old)
+            self.total -= old
+        if self.cursor >= self.n:             # grow: rebuild compacted
+            live = sorted(self.pos, key=self.pos.get)
+            self.n = max(2 * self.n, 2 * len(live) + 16)
+            self.tree = [0.0] * (self.n + 1)
+            self.cursor = 0
+            for k in live:
+                self.cursor += 1
+                self.pos[k] = self.cursor
+                self._add(self.cursor, self.size[k])
+        self.cursor += 1
+        self._add(self.cursor, bytes_)
+        self.total += bytes_
+        self.pos[key] = self.cursor
+        self.size[key] = bytes_
 
 
 @dataclass(frozen=True)
@@ -144,6 +214,7 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
     # Pipeline state.
     depth = hw.pipeline_depth
     dma_cursor = hw.kernel_launch + hw.hbm_latency   # DMA engine free-time
+    out_cursor = 0.0                                 # last flush completion
     comp_hist: List[float] = []                      # compute end times (ring)
     comp_cursor = 0.0
     total_bytes = 0.0
@@ -170,9 +241,21 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
         n_steps += 1
 
     def write_back(bytes_: float) -> None:
-        nonlocal dma_cursor, total_bytes, clock
-        start = max(dma_cursor, comp_cursor)
-        dma_cursor = start + bytes_ / bw + hw.dma_fixed
+        # The flush waits for the tile's accumulate (data dependency) and
+        # consumes port bandwidth, but does NOT stall the next tile's
+        # already-queued input fetches: a reordering DMA queue never idles
+        # with fetch work pending (Pallas double-buffers output windows on
+        # the outbound stream).  Port capacity is reserved order-free
+        # (``dma_cursor += port_s``, same engine total as before); only
+        # the completion time ``out_cursor`` carries the data dependency.
+        # The old ``start = max(dma_cursor, comp_cursor)`` convention put
+        # an engine-idle bubble + refill in front of EVERY output tile —
+        # the oracle fidelity harness exposed it as a per-tile straggler
+        # artifact the continuous grid pipeline does not have.
+        nonlocal dma_cursor, out_cursor, total_bytes, clock
+        port_s = bytes_ / bw + hw.dma_fixed
+        dma_cursor += port_s
+        out_cursor = max(out_cursor, comp_cursor + port_s, dma_cursor)
         total_bytes += bytes_
         clock += bytes_                               # writes evict too
         level_bytes[backing.name] += bytes_
@@ -262,7 +345,7 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
                        + (en if ep.bias else 0)) * bi
             write_back(em * en * bo + e_fetch)
 
-    end = max(comp_cursor, dma_cursor)
+    end = max(comp_cursor, dma_cursor, out_cursor)
     units = Tm * Tn * p.batch * t.split_k
     return SimResult(time=end, hbm_bytes=total_bytes,
                      mxu_busy=mxu_busy, steps=n_steps,
@@ -274,9 +357,18 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
                         hw: HardwareSpec) -> SimResult:
     """Round-robin multi-core scheduler over the chip's cores.
 
-    Per-core rates are the chip aggregates shared evenly (MXU: peak/C,
-    ports: bandwidth/C — contention is static, a deliberate simplification
-    the closed-form model shares).  Reuse distances are measured in bytes
+    Compute rates are the chip aggregates shared evenly (MXU: peak/C,
+    staging port: bandwidth/C — cores own their compute, static share is
+    physical).  Memory-port bandwidth is shared over the cores *actually
+    fetching from that level within the same wave* (fetch-stream
+    population): a lone core streaming compulsory panels from HBM while
+    the rest of the wave hits cache gets (nearly) the full HBM rate, not a
+    1/C sliver.  The calibration subsystem's oracle harness exposed the
+    older all-C static share as a straggler artifact — one first-touch
+    unit per wave priced at C x the HBM time dominated every wall clock —
+    and in the uniform-mixing limit the population share reduces exactly
+    to the closed-form model's per-level convention (wave wall = max over
+    ports of wave-bytes/bandwidth).  Reuse distances are measured in bytes
     against a chip-wide clock for device-scoped caches and per-partition
     clocks for partition-scoped ones; cores are blocked per partition
     (cores [p*core_count, (p+1)*core_count) form partition p), so within a
@@ -285,14 +377,22 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     Schedules: ``data_parallel`` — one unit per (tile, k-shard); shards of
     a split tile land on different cores, write a full-block f32 partial
     each, and the tile's last shard runs the combine (reads all split_k
-    partials).  ``stream_k`` — the flattened k-step space is cut into
-    ``ceil(steps / C)``-step strips, one per core; every strip boundary not
-    on a tile edge costs one partial write + read (fixup).  Partials are
-    consumed as soon as they are complete, so their footprint is
-    deterministic: the serving level is the nearest cache whose budget
-    covers it at the cache's partition share — the one placement decision
-    shared with the model's formulation, since a never-idle buffer has no
-    measurable reuse distance.
+    partials).  The wave index is the round-robin pass (unit_index // C).
+    ``stream_k`` — the flattened k-step space is cut into
+    ``ceil(steps / C)``-step strips, one per core; every strip boundary
+    not on a tile edge costs one partial write + read (fixup).  Strips
+    start together and advance span-by-span, so the wave index is the span
+    ordinal within the strip.  Partials are consumed as soon as they are
+    complete, so their footprint is deterministic: the serving level is
+    the nearest cache whose budget covers it at the cache's partition
+    share — the one placement decision shared with the model's
+    formulation, since a never-idle buffer has no measurable reuse
+    distance.
+
+    Placement runs in a first pass in deterministic clock order (byte
+    counters, serving levels, waves/units/steps are untouched by the
+    pricing convention — ``tests/test_wave_model.py`` pins them); the
+    second pass prices every recorded event with its wave's populations.
     """
     bi = DTYPE_BYTES[p.in_dtype]
     bo = DTYPE_BYTES[p.out_dtype]
@@ -313,32 +413,40 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     caches = hw.cache_levels
     backing = hw.backing
     level_bytes = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
-    chip_clock = 0.0
-    part_clock = [0.0] * hw.partitions
-    last_chip: Dict = {}                      # (kind, key) -> clock
-    last_part: Dict = {}                      # (part, kind, key) -> clock
+    # Exact LRU stack distance per scope (``_LruStack``): the reuse
+    # distance of a panel is the summed size of the DISTINCT keys touched
+    # since its last use.  (The single-core simulator keeps the cheaper
+    # streamed-bytes proxy — an upper bound on stack distance — because
+    # its consecutive-step revisit structure rarely puts a reuse window
+    # near a budget boundary; here the oracle harness showed the proxy's
+    # double-counted repeat fetches spilling classes an ideal-LRU cache,
+    # and the closed-form model's unique-byte windows, keep resident.)
+    chip_lru = _LruStack()
+    part_lru = [_LruStack() for _ in range(hw.partitions)]
 
     def serving_level(kind, key, part) -> MemoryLevel:
         """Measured-reuse-distance placement: nearest cache whose budget
-        covers the byte distance since this panel's last use, at the
-        clock of the cache's scope."""
+        covers the LRU stack distance since this panel's last use, in the
+        cache's scope (chip-wide, or this core's partition)."""
+        d_chip = d_part = None                # lazy, computed on demand
         for lvl in reversed(caches):
             if lvl.scope == "partition":
-                prev = last_part.get((part, kind, key))
-                dist = None if prev is None else part_clock[part] - prev
+                if d_part is None:
+                    d = part_lru[part].distance((kind, key))
+                    d_part = float("inf") if d is None else d
+                dist = d_part
             else:
-                prev = last_chip.get((kind, key))
-                dist = None if prev is None else chip_clock - prev
-            if dist is not None and dist <= lvl.budget():
+                if d_chip is None:
+                    d = chip_lru.distance((kind, key))
+                    d_chip = float("inf") if d is None else d
+                dist = d_chip
+            if dist <= lvl.budget():
                 return lvl
         return backing
 
     def record_use(kind, key, part, bytes_) -> None:
-        nonlocal chip_clock
-        chip_clock += bytes_
-        part_clock[part] += bytes_
-        last_chip[(kind, key)] = chip_clock
-        last_part[(part, kind, key)] = part_clock[part]
+        chip_lru.use((kind, key), bytes_)
+        part_lru[part].use((kind, key), bytes_)
 
     def fixup_level() -> MemoryLevel:
         """Serving level for block partials (combine / stream-K fixup):
@@ -360,11 +468,20 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     fix_lvl = fixup_level()
     ep = p.epilogue
 
-    def span_cost(e, i, j, s, blk_lo, n_blk, core) -> float:
-        """Fetch+compute seconds for ``n_blk`` k-blocks (starting at block
-        ``blk_lo``) of k-shard ``s`` of tile (i, j) on ``core``; counts
-        bytes and steps.  O(1) via the constant interior step (full blocks)
-        + the ragged final k block of the shard."""
+    # Pass-1 event records.  Fetch spans:
+    #   (core, wave, n_empty, nfull, fa_full, fb_full, fa_rag, fb_rag,
+    #    lvl_a, lvl_b)
+    # writes (partials / combines / output flushes):
+    #   (core, wave, bytes, level)
+    fetch_events: List[Tuple] = []
+    write_events: List[Tuple] = []
+
+    def span_place(e, i, j, s, blk_lo, n_blk, core, wave) -> None:
+        """Placement for ``n_blk`` k-blocks (starting at block ``blk_lo``)
+        of k-shard ``s`` of tile (i, j) on ``core``: serving levels from
+        the clocks, byte/step counters, and the priced-event record.  O(1)
+        via the constant interior step (full blocks) + the ragged final k
+        block of the shard."""
         nonlocal total_bytes, mxu_busy, n_steps
         part = core // hw.core_count
         em = min(t.bm, p.M - i * t.bm)
@@ -379,18 +496,12 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         # ALL n_blk padded grid steps run (compute chews full blocks); only
         # the real span moves bytes — exactly the single-core accounting.
         n_empty = n_blk - nfull - (1 if ragged else 0)
-        secs = n_empty * ct
         a_total = em * span * bi
         b_total = span * en * bi
-        if nfull:
-            fa, fb = em * t.bk * bi, t.bk * en * bi
-            secs += nfull * max(ct, (fa * C / lvl_a.bandwidth
-                                     + fb * C / lvl_b.bandwidth)
-                                + hw.dma_fixed)
-        if ragged:
-            fa, fb = em * ragged * bi, ragged * en * bi
-            secs += max(ct, (fa * C / lvl_a.bandwidth
-                             + fb * C / lvl_b.bandwidth) + hw.dma_fixed)
+        fetch_events.append(
+            (core, wave, n_empty, nfull,
+             em * t.bk * bi, t.bk * en * bi,
+             em * ragged * bi, ragged * en * bi, lvl_a, lvl_b))
         level_bytes[lvl_a.name] += a_total
         level_bytes[lvl_b.name] += b_total
         total_bytes += a_total + b_total
@@ -398,9 +509,8 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         n_steps += n_blk
         record_use("a", (e, i, s), part, a_total)
         record_use("b", (e, j, s), part, b_total)
-        return secs
 
-    def writeback_cost(e, i, j, core) -> float:
+    def writeback_place(e, i, j, core, wave) -> None:
         """Output flush + epilogue operand fetch for tile (i, j)."""
         nonlocal total_bytes
         em = min(t.bm, p.M - i * t.bm)
@@ -411,7 +521,7 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         total_bytes += wb
         part = core // hw.core_count
         record_use("wb", (e, i, j), part, wb)
-        return wb * C / backing.bandwidth
+        write_events.append((core, wave, wb, backing))
 
     tiles = [(e, i, j) for e in range(p.batch)
              for (i, j) in _tile_order(Tm, Tn, t.group_m)]
@@ -425,48 +535,73 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         st = 0
         for core in range(cdiv(total_steps, q)):
             hi = min(st + q, total_steps)
-            strip_secs = 0.0
+            wave = 0                          # span ordinal within strip
             if st % steps_per_tile:
                 # strip boundary inside a tile: the previous core wrote a
                 # block partial, this one reads it back (fixup).
                 fix = 2.0 * block_acc
                 level_bytes[fix_lvl.name] += fix
                 total_bytes += fix
-                strip_secs += fix * C / fix_lvl.bandwidth
+                write_events.append((core, 0, fix, fix_lvl))
             while st < hi:
                 ti, off = divmod(st, steps_per_tile)
                 e, i, j = tiles[ti]
                 s, blk = divmod(off, Tk)
                 n_sub = min(hi - st, Tk - blk)
-                strip_secs += span_cost(e, i, j, s, blk, n_sub, core)
+                span_place(e, i, j, s, blk, n_sub, core, wave)
                 st += n_sub
                 if st % steps_per_tile == 0:
-                    strip_secs += writeback_cost(e, i, j, core)
-            core_time[core] += strip_secs
+                    writeback_place(e, i, j, core, wave)
+                wave += 1
     else:
         unit_list = [(e, i, j, s) for (e, i, j) in tiles
                      for s in range(t.split_k)]
         units = len(unit_list)
-        loads = [0] * C
         for q_i, (e, i, j, s) in enumerate(unit_list):
             core = q_i % C
-            loads[core] += 1
-            secs = span_cost(e, i, j, s, 0, Tk, core)
+            wave = q_i // C
+            span_place(e, i, j, s, 0, Tk, core, wave)
             if t.split_k > 1:
                 # shard writes its block partial; last shard combines.
                 level_bytes[fix_lvl.name] += block_acc
                 total_bytes += block_acc
-                secs += block_acc * C / fix_lvl.bandwidth
+                write_events.append((core, wave, block_acc, fix_lvl))
                 if s == t.split_k - 1:
                     rd = t.split_k * block_acc
                     level_bytes[fix_lvl.name] += rd
                     total_bytes += rd
-                    secs += rd * C / fix_lvl.bandwidth
-                    secs += writeback_cost(e, i, j, core)
+                    write_events.append((core, wave, rd, fix_lvl))
+                    writeback_place(e, i, j, core, wave)
             else:
-                secs += writeback_cost(e, i, j, core)
-            core_time[core] += secs
-        waves = max(loads)
+                writeback_place(e, i, j, core, wave)
+        waves = cdiv(units, C)
+
+    # Pass 2 — fetch-stream populations per (wave, level): the cores of a
+    # wave that fetch from a level share its port; everyone else does not
+    # occupy it.  Writes/partials are priced at their wave's population
+    # (min 1 — a lone writer gets the full port).
+    pop: Dict[Tuple[int, str], set] = {}
+    for (core, wave, _, _, _, _, _, _, lvl_a, lvl_b) in fetch_events:
+        pop.setdefault((wave, lvl_a.name), set()).add(core)
+        pop.setdefault((wave, lvl_b.name), set()).add(core)
+    n_pop = {k: len(v) for k, v in pop.items()}
+
+    for (core, wave, n_empty, nfull, fa, fb, fa_r, fb_r,
+         lvl_a, lvl_b) in fetch_events:
+        na = n_pop[(wave, lvl_a.name)]
+        nb = n_pop[(wave, lvl_b.name)]
+        secs = n_empty * ct
+        if nfull:
+            secs += nfull * max(ct, (fa * na / lvl_a.bandwidth
+                                     + fb * nb / lvl_b.bandwidth)
+                                + hw.dma_fixed)
+        if fa_r or fb_r:
+            secs += max(ct, (fa_r * na / lvl_a.bandwidth
+                             + fb_r * nb / lvl_b.bandwidth) + hw.dma_fixed)
+        core_time[core] += secs
+    for (core, wave, bytes_, lvl) in write_events:
+        n = n_pop.get((wave, lvl.name), 1)
+        core_time[core] += bytes_ * n / lvl.bandwidth
 
     launch = hw.kernel_launch + hw.hbm_latency
     end = launch + max(core_time)
@@ -474,6 +609,72 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
                      mxu_busy=mxu_busy, steps=n_steps,
                      level_bytes=level_bytes,
                      units=units, waves=waves, cores=C)
+
+
+# ---------------------------------------------------------------------------
+# Virtual-device adapter (DESIGN.md §8).
+#
+# The calibration subsystem (repro.calib) probes a Device with three
+# microbenchmark primitives — a strided stream, a resident compute loop, and
+# a wave-occupancy grid — and fits Topology constants from the timings.  On
+# real hardware those primitives are measured; in CI they run against these
+# deterministic simulated implementations, which share the GEMM simulators'
+# conventions (reuse-distance serving levels, static 1/C bandwidth and
+# compute shares, per-fetch dma_fixed, kernel_launch + first-byte latency)
+# so the fit pipeline can be validated end-to-end: the fitted topology must
+# recover the planted constants.
+# ---------------------------------------------------------------------------
+
+def simulate_stream(hw: HardwareSpec, nbytes: float, window: int,
+                    n_chunks: int = 64) -> float:
+    """Seconds to stream ``nbytes`` cyclically through a working set of
+    ``window`` bytes, issued as ``n_chunks`` DMA fetches.
+
+    Serving-level rule shared with the GEMM simulators' measured
+    reuse-distance placement: after the compulsory first pass (served from
+    backing memory), every re-touch of the window has reuse distance ==
+    ``window`` bytes, so it is served from the nearest level — staging
+    included, a pure copy stream pins nothing else there — whose budget
+    covers the window, else from backing memory."""
+    backing = hw.backing
+    serving = backing
+    for lvl in reversed(hw.levels[1:]):       # innermost (staging) first
+        if window <= lvl.budget():
+            serving = lvl
+            break
+    first_pass = min(float(window), nbytes)
+    return (hw.kernel_launch + hw.hbm_latency
+            + first_pass / backing.bandwidth
+            + (nbytes - first_pass) / serving.bandwidth
+            + n_chunks * hw.dma_fixed)
+
+
+def simulate_compute(hw: HardwareSpec, dtype: str, n_atoms: int) -> float:
+    """Seconds for ``n_atoms`` back-to-back MXU macro-atoms on resident
+    operands (the issue-rate microbenchmark: no memory traffic)."""
+    mm, mn, mk = hw.mxu_shape
+    return hw.kernel_launch + n_atoms * (2.0 * mm * mn * mk) / hw.flops(dtype)
+
+
+def simulate_wave(hw: HardwareSpec, n_units: int, unit_atoms: int,
+                  dtype: Optional[str] = None) -> float:
+    """Seconds for ``n_units`` identical compute-only work units scheduled
+    round-robin over the chip's cores — the wave-latency microbenchmark.
+
+    Each core gets the static 1/C share of the chip's peak (the same
+    simplification ``_simulate_multicore`` and the closed-form occupancy
+    stage apply), so the time staircase steps once per wave; the probe fits
+    exactly that static-share slope plus ``kernel_launch`` as intercept.
+    ``dtype`` defaults to the shared :func:`reference_dtype` rule, so
+    bf16-less topologies probe their first known dtype instead of
+    crashing."""
+    if dtype is None:
+        dtype = reference_dtype(hw.peak_flops)
+    C = hw.total_cores()
+    mm, mn, mk = hw.mxu_shape
+    unit_s = unit_atoms * (2.0 * mm * mn * mk) * C / hw.flops(dtype)
+    waves = cdiv(n_units, C)
+    return hw.kernel_launch + waves * unit_s
 
 
 def exhaustive_best(p: GemmProblem, hw: HardwareSpec,

@@ -33,9 +33,11 @@ selector turns every ceil-division into a shift.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import weakref
 from dataclasses import dataclass, field
-from typing import Dict, Mapping, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 from repro.core.dtypes import DTYPE_BYTES
 
@@ -288,6 +290,105 @@ def calibration_field_names(topo: Topology) -> Tuple[str, ...]:
     """Names ``with_calibration``/``calibrate`` accept for this topology."""
     real = tuple(f.name for f in dataclasses.fields(topo))
     return real + tuple(_LEVEL_ALIASES)
+
+
+def reference_dtype(peak_flops: Mapping[str, float]) -> str:
+    """The dtype the wave probe times and the fit's static-share / unit
+    sizing divide by: bfloat16 when the topology has it, else the first
+    known dtype in sorted order.  One shared rule so probes, fits, and the
+    simulator's wave primitive can never disagree on a bf16-less chain."""
+    return "bfloat16" if "bfloat16" in peak_flops else sorted(peak_flops)[0]
+
+
+# Fingerprints are content hashes of immutable Topology objects, so they
+# are memoized by identity (Topology holds a dict field and is therefore
+# unhashable; id() plus a liveness-checked weakref is the safe key — a
+# recycled id after GC fails the ``is`` check and recomputes).  The memo
+# keeps the per-selection fingerprint check out of the hot memo path.
+_FP_MEMO: Dict[int, Tuple] = {}
+
+
+def topology_fingerprint(hw: Topology) -> str:
+    """Content fingerprint of everything GEMM selection depends on — levels
+    (capacities AND rates), compute rates, menus, overheads.  Deliberately
+    name-blind: a ``with_calibration`` retarget keeps the preset name but
+    changes the fingerprint, which is how the persistent selection table
+    invalidates warm starts after recalibration and how calibrated-topology
+    artifacts prove which constants a selection was made against."""
+    memo = _FP_MEMO.get(id(hw))
+    if memo is not None and memo[0]() is hw:
+        return memo[1]
+    ident = (hw.levels, hw.mxu_shape, tuple(sorted(hw.peak_flops.items())),
+             hw.bm_menu, hw.bn_menu, hw.bk_menu, hw.split_k_menu,
+             hw.group_m_menu, hw.schedule_menu, hw.partitions,
+             hw.core_count, hw.dma_fixed, hw.kernel_launch,
+             hw.pipeline_depth, hw.lane_width, hw.sublane_f32)
+    fp = hashlib.md5(repr(ident).encode()).hexdigest()[:16]
+    try:
+        _FP_MEMO[id(hw)] = (
+            weakref.ref(hw, lambda _, i=id(hw): _FP_MEMO.pop(i, None)), fp)
+    except TypeError:
+        pass
+    return fp
+
+
+# ---------------------------------------------------------------------------
+# Calibrated-topology artifacts (DESIGN.md §8).
+#
+# A calibration run (repro.calib: probes -> fit) produces a topology whose
+# measured constants replace the hand-estimated preset values, wrapped in a
+# JSON document that carries full provenance: which device was probed, the
+# raw probe samples, per-fit residuals, and the fingerprint of the fitted
+# topology (the same fingerprint the selection cache stores per entry, so a
+# served artifact invalidates stale warm starts end-to-end).
+# ---------------------------------------------------------------------------
+
+CALIBRATED_TOPOLOGY_SCHEMA = "repro/calibrated-topology/v1"
+
+
+def calibrated_topology_dict(topo: Topology,
+                             provenance: Optional[Mapping] = None) -> Dict:
+    """The calibrated-topology artifact document (see DESIGN.md §8 for the
+    schema).  ``provenance`` is free-form JSON-serializable metadata from
+    the fit pipeline (device, probes, residuals, fitted fields); the
+    topology fingerprint is always (re)stamped here so artifacts cannot
+    carry a stale one."""
+    prov = dict(provenance or {})
+    prov["fingerprint"] = topology_fingerprint(topo)
+    return {"schema": CALIBRATED_TOPOLOGY_SCHEMA,
+            "topology": topo.to_dict(),
+            "provenance": prov}
+
+
+def calibrated_topology_json(topo: Topology,
+                             provenance: Optional[Mapping] = None) -> str:
+    return json.dumps(calibrated_topology_dict(topo, provenance),
+                      indent=1, sort_keys=True)
+
+
+def load_calibrated_topology(text: str) -> Tuple[Topology, Dict]:
+    """Parse a calibrated-topology artifact -> (topology, provenance).
+
+    Validates the schema tag and the provenance fingerprint against the
+    recomputed fingerprint of the parsed topology — a hand-edited artifact
+    whose constants no longer match its recorded fingerprint is rejected
+    (it would silently defeat the selection cache's invalidation)."""
+    doc = json.loads(text)
+    schema = doc.get("schema")
+    if schema != CALIBRATED_TOPOLOGY_SCHEMA:
+        raise ValueError(
+            f"not a calibrated-topology artifact: schema={schema!r}, "
+            f"expected {CALIBRATED_TOPOLOGY_SCHEMA!r}")
+    topo = Topology.from_dict(doc["topology"])
+    prov = dict(doc.get("provenance", {}))
+    recorded = prov.get("fingerprint")
+    actual = topology_fingerprint(topo)
+    if recorded != actual:
+        raise ValueError(
+            f"calibrated-topology artifact for {topo.name!r} is corrupt: "
+            f"recorded fingerprint {recorded!r} != recomputed {actual!r} "
+            f"(constants were edited after the fit)")
+    return topo, prov
 
 
 # Backward-compatible name: the whole repo grew up calling this HardwareSpec.

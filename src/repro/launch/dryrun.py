@@ -26,8 +26,11 @@ import jax.numpy as jnp           # noqa: E402
 
 from repro.configs.registry import (  # noqa: E402
     ARCH_IDS, all_cells, get_config, get_shape)
+from repro.core.hardware import TPU_V5E  # noqa: E402
 from repro.core.roofline import (     # noqa: E402
     cost_analysis_terms, parse_collective_bytes, roofline)
+from repro.core.topology import (     # noqa: E402
+    HardwareSpec, topology_fingerprint)
 from repro.distributed import (       # noqa: E402
     batch_shardings, cache_shardings, opt_shardings, param_shardings,
     replicated)
@@ -203,7 +206,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              sp_stash: bool = False, gqa_packed_decode: bool = False,
              kv_repeat_weights: bool = False,
              moe_dense_decode: bool = False,
-             moe_local_dispatch: bool = False) -> dict:
+             moe_local_dispatch: bool = False,
+             hw: HardwareSpec = TPU_V5E) -> dict:
     cfg = get_config(arch)
     if sp_stash:
         cfg = dataclasses.replace(cfg, sp_stash=True)
@@ -243,9 +247,21 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mem_analytic = estimate_cell_memory(cfg, shape, dict(mesh.shape))
     hbm_analytic = estimate_step_hbm_bytes(cfg, shape, dict(mesh.shape),
                                            microbatches=microbatches)
+    # The serving topology the roofline terms below are priced against
+    # (the same ``hw`` handed to ``roofline``) — recorded per artifact so
+    # benchmarks/roofline_table can derive per-level port columns without
+    # guessing the preset, and so passing a calibrated topology through
+    # ``run_cell(hw=...)`` is visible in the artifact itself.
     record = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "chips": chips, "kind": shape.kind,
+        "topology": {
+            "name": hw.name,
+            "fingerprint": topology_fingerprint(hw),
+            "levels": [{"name": lvl.name, "bandwidth": lvl.bandwidth,
+                        "capacity": lvl.capacity, "scope": lvl.scope}
+                       for lvl in hw.levels],
+        },
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "microbatches": microbatches,
         "sp_stash": sp_stash,
@@ -279,13 +295,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             hlo_flops=probes["flops"], hlo_bytes=hbm_analytic["total"],
             collectives={"total": probes["collective_bytes"],
                          "all-reduce": probes["collective_bytes"]},
-            model_flops=model.model_flops(shape))
+            model_flops=model.model_flops(shape), hw=hw)
         record["roofline"] = rep.as_dict()
     else:
         rep = roofline(arch=arch, shape_name=shape_name, mesh=mesh_name,
                        chips=chips, hlo_flops=flops,
                        hlo_bytes=hbm_analytic["total"], collectives=colls,
-                       model_flops=model.model_flops(shape))
+                       model_flops=model.model_flops(shape), hw=hw)
         record["roofline"] = rep.as_dict()
 
     os.makedirs(out_dir, exist_ok=True)
