@@ -17,19 +17,30 @@ Entry points: ``repro.core.hardware.calibrate(base, device=...)``,
 ``tools/fit_topology.py`` (CLI), ``benchmarks/model_fidelity.py``.
 """
 from repro.calib.device import Device, JaxDevice, VirtualDevice, get_device
+from repro.calib.faults import (FaultPlan, FaultyDevice,
+                                InjectedCompileError,
+                                InjectedTransientError, corrupt_cache_entry,
+                                decode_injector, launch_injector,
+                                scripted_injector,
+                                tamper_artifact_fingerprint, truncate_file)
 from repro.calib.fit import CalibrationResult, fit_topology, theil_sen
 from repro.calib.oracle import (OracleRow, fidelity_report, fidelity_row,
                                 fidelity_sweep, oracle_best,
                                 scaled_llama3_shapes)
-from repro.calib.probes import (ProbeSweep, level_windows, probe_compute,
-                                probe_issue, probe_latency,
+from repro.calib.probes import (ProbeSweep, ProbeTimeout, level_windows,
+                                probe_compute, probe_issue, probe_latency,
                                 probe_stream_levels, probe_wave, run_probes)
 
 __all__ = [
     "Device", "JaxDevice", "VirtualDevice", "get_device",
+    "FaultPlan", "FaultyDevice", "InjectedCompileError",
+    "InjectedTransientError", "corrupt_cache_entry", "decode_injector",
+    "launch_injector", "scripted_injector", "tamper_artifact_fingerprint",
+    "truncate_file",
     "CalibrationResult", "fit_topology", "theil_sen",
     "OracleRow", "fidelity_report", "fidelity_row", "fidelity_sweep",
     "oracle_best", "scaled_llama3_shapes",
-    "ProbeSweep", "level_windows", "probe_compute", "probe_issue",
-    "probe_latency", "probe_stream_levels", "probe_wave", "run_probes",
+    "ProbeSweep", "ProbeTimeout", "level_windows", "probe_compute",
+    "probe_issue", "probe_latency", "probe_stream_levels", "probe_wave",
+    "run_probes",
 ]

@@ -224,12 +224,24 @@ class JaxDevice:
 
 
 def get_device(kind: str, base: Topology, *, noise: float = 0.0,
-               seed: int = 0, planted: Optional[Topology] = None) -> Device:
+               seed: int = 0, planted: Optional[Topology] = None,
+               fault_plan=None) -> Device:
     """Device factory for the CLI / benchmarks: ``virtual`` wraps the
     simulator around ``planted`` (default: the base preset itself — the
-    self-consistency check), ``jax`` measures real executions."""
+    self-consistency check), ``jax`` measures real executions.
+
+    ``fault_plan`` (a ``repro.calib.faults.FaultPlan``) decorates the
+    device with seeded, deterministic measurement faults — the chaos
+    harness's entry point into the probe pipeline."""
     if kind == "virtual":
-        return VirtualDevice(planted or base, noise=noise, seed=seed)
-    if kind == "jax":
-        return JaxDevice()
-    raise ValueError(f"unknown device kind {kind!r}; choose virtual | jax")
+        device: Device = VirtualDevice(planted or base, noise=noise,
+                                       seed=seed)
+    elif kind == "jax":
+        device = JaxDevice()
+    else:
+        raise ValueError(
+            f"unknown device kind {kind!r}; choose virtual | jax")
+    if fault_plan is not None:
+        from repro.calib.faults import FaultyDevice
+        device = FaultyDevice(device, fault_plan)
+    return device

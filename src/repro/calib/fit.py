@@ -79,6 +79,9 @@ class CalibrationResult:
     static_share: float               # wave-probe share coefficient (~1.0)
     probes: Dict[str, ProbeSweep] = field(default_factory=dict)
     created_unix: float = 0.0
+    degraded: Dict[str, str] = field(default_factory=dict)
+    # field path -> why its fit was skipped and the preset value kept
+    # (degraded-mode calibration, DESIGN.md §9); empty on a clean fit
 
     def provenance(self) -> Dict:
         return {
@@ -87,6 +90,7 @@ class CalibrationResult:
             "created_unix": self.created_unix,
             "fitted_fields": dict(self.fitted),
             "residuals": dict(self.residuals),
+            "degraded": dict(self.degraded),
             "static_share": self.static_share,
             "base_fingerprint": topology_fingerprint(self.base),
             "probes": {k: v.to_dict() for k, v in self.probes.items()},
@@ -118,9 +122,14 @@ class CalibrationResult:
         return out
 
 
+_FIT_ERRORS = (ValueError, KeyError, IndexError, ZeroDivisionError)
+
+
 def fit_topology(base: Topology, device: Device, *,
                  dtypes: Optional[Sequence[str]] = None,
                  probes: Optional[Mapping[str, ProbeSweep]] = None,
+                 deadline_s: Optional[float] = None,
+                 allow_degraded: bool = False,
                  ) -> CalibrationResult:
     """Run (or reuse) the probe suite against ``device`` and fit a
     calibrated topology from ``base``'s structure.
@@ -128,70 +137,112 @@ def fit_topology(base: Topology, device: Device, *,
     Structure (level chain, capacities, core counts, menus, MXU shape) is
     taken from the datasheet preset; only *rates and overheads* are fitted
     — exactly the paper's §V-E retargeting contract.  Levels whose sweep is
-    missing (budget inversion) keep their preset bandwidth."""
+    missing (budget inversion) keep their preset bandwidth.
+
+    ``deadline_s`` bounds each probe call with the watchdog (probes.py).
+    ``allow_degraded=True`` turns per-field fit failures (too few surviving
+    samples after watchdog drops, a fit value failing ``validate_measured``)
+    into *kept preset values* recorded in ``CalibrationResult.degraded``
+    (and artifact provenance) instead of aborting the whole calibration —
+    the fail-soft mode for untrusted substrates (DESIGN.md §9).  The
+    default remains fail-fast: a tool run should see the error."""
     from repro.core.hardware import validate_measured
 
     sweeps = dict(probes) if probes is not None \
-        else run_probes(device, base, dtypes=dtypes)
+        else run_probes(device, base, dtypes=dtypes, deadline_s=deadline_s)
     mm, mn, mk = base.mxu_shape
     atom_flops = 2.0 * mm * mn * mk
     fitted: Dict[str, float] = {}
     residuals: Dict[str, float] = {}
+    degraded: Dict[str, str] = {}
+
+    def _give_up(name: str, e: Exception) -> None:
+        if not allow_degraded:
+            raise
+        degraded[name] = str(e) or type(e).__name__
 
     # -- compute issue rate per dtype -> peak_flops ------------------------
     peak = dict(base.peak_flops)
     for key, sw in sweeps.items():
         if sw.kind != "compute":
             continue
-        slope, icpt = theil_sen(sw.xs(), sw.ys())
-        value = atom_flops / slope
-        validate_measured(f"peak_flops.{sw.target}", value)
+        try:
+            slope, icpt = theil_sen(sw.xs(), sw.ys())
+            value = atom_flops / slope
+            validate_measured(f"peak_flops.{sw.target}", value)
+        except _FIT_ERRORS as e:
+            _give_up(f"peak_flops.{sw.target}", e)
+            continue
         peak[sw.target] = value
         fitted[f"peak_flops.{sw.target}"] = value
         residuals[f"peak_flops.{sw.target}"] = _rel_residual(sw, slope, icpt)
 
     # -- wave staircase -> kernel_launch + static-share coefficient --------
-    wave = sweeps["wave"]
-    w_slope, w_icpt = theil_sen(wave.xs(), wave.ys())
-    kernel_launch = max(w_icpt, 0.0)
-    validate_measured("kernel_launch", kernel_launch)
-    fitted["kernel_launch"] = kernel_launch
-    residuals["kernel_launch"] = _rel_residual(wave, w_slope, w_icpt)
-    C = base.total_cores()
-    unit_atoms = wave.params["unit_atoms"]
-    # The dtype the wave probe actually timed (recorded on the sweep;
-    # legacy sweeps without it fall back to the same shared rule).
-    ref_dtype = wave.target or reference_dtype(peak)
-    static_share = w_slope * peak[ref_dtype] / (unit_atoms * atom_flops * C)
+    kernel_launch = base.kernel_launch
+    static_share = 1.0          # degraded: assume the model's static share
+    try:
+        wave = sweeps["wave"]
+        w_slope, w_icpt = theil_sen(wave.xs(), wave.ys())
+        kernel_launch = max(w_icpt, 0.0)
+        validate_measured("kernel_launch", kernel_launch)
+        C = base.total_cores()
+        unit_atoms = wave.params["unit_atoms"]
+        # The dtype the wave probe actually timed (recorded on the sweep;
+        # legacy sweeps without it fall back to the same shared rule).
+        ref_dtype = wave.target or reference_dtype(peak)
+        static_share = (w_slope * peak[ref_dtype]
+                        / (unit_atoms * atom_flops * C))
+    except _FIT_ERRORS as e:
+        kernel_launch = base.kernel_launch
+        _give_up("kernel_launch", e)
+    else:
+        fitted["kernel_launch"] = kernel_launch
+        residuals["kernel_launch"] = _rel_residual(wave, w_slope, w_icpt)
 
     # -- issue sweep -> dma_fixed ------------------------------------------
-    issue = sweeps["issue"]
-    i_slope, i_icpt = theil_sen(issue.xs(), issue.ys())
-    dma_fixed = max(i_slope, 0.0)
-    validate_measured("dma_fixed", dma_fixed)
-    fitted["dma_fixed"] = dma_fixed
-    residuals["dma_fixed"] = _rel_residual(issue, i_slope, i_icpt)
+    dma_fixed = base.dma_fixed
+    try:
+        issue = sweeps["issue"]
+        i_slope, i_icpt = theil_sen(issue.xs(), issue.ys())
+        dma_fixed = max(i_slope, 0.0)
+        validate_measured("dma_fixed", dma_fixed)
+    except _FIT_ERRORS as e:
+        dma_fixed = base.dma_fixed
+        _give_up("dma_fixed", e)
+    else:
+        fitted["dma_fixed"] = dma_fixed
+        residuals["dma_fixed"] = _rel_residual(issue, i_slope, i_icpt)
 
     # -- per-level stream sweeps -> bandwidths ------------------------------
     bandwidths: Dict[str, float] = {}
     for key, sw in sweeps.items():
         if sw.kind != "stream":
             continue
-        slope, icpt = theil_sen(sw.xs(), sw.ys())
-        value = 1.0 / slope
-        validate_measured(f"levels.{sw.target}.bandwidth", value)
+        try:
+            slope, icpt = theil_sen(sw.xs(), sw.ys())
+            value = 1.0 / slope
+            validate_measured(f"levels.{sw.target}.bandwidth", value)
+        except _FIT_ERRORS as e:
+            _give_up(f"levels.{sw.target}.bandwidth", e)
+            continue
         bandwidths[sw.target] = value
         fitted[f"levels.{sw.target}.bandwidth"] = value
         residuals[f"levels.{sw.target}.bandwidth"] = \
             _rel_residual(sw, slope, icpt)
 
     # -- single-pass latency sweep -> backing first-byte latency -----------
-    lat = sweeps["latency"]
-    l_slope, l_icpt = theil_sen(lat.xs(), lat.ys())
-    hbm_latency = max(l_icpt - kernel_launch - dma_fixed, 0.0)
-    validate_measured("hbm_latency", hbm_latency)
-    fitted["hbm_latency"] = hbm_latency
-    residuals["hbm_latency"] = _rel_residual(lat, l_slope, l_icpt)
+    hbm_latency = base.backing.latency
+    try:
+        lat = sweeps["latency"]
+        l_slope, l_icpt = theil_sen(lat.xs(), lat.ys())
+        hbm_latency = max(l_icpt - kernel_launch - dma_fixed, 0.0)
+        validate_measured("hbm_latency", hbm_latency)
+    except _FIT_ERRORS as e:
+        hbm_latency = base.backing.latency
+        _give_up("hbm_latency", e)
+    else:
+        fitted["hbm_latency"] = hbm_latency
+        residuals["hbm_latency"] = _rel_residual(lat, l_slope, l_icpt)
 
     levels = tuple(
         replace(l,
@@ -204,4 +255,4 @@ def fit_topology(base: Topology, device: Device, *,
     return CalibrationResult(
         base=base, topology=topo, device_name=device.name,
         fitted=fitted, residuals=residuals, static_share=static_share,
-        probes=sweeps, created_unix=_time.time())
+        probes=sweeps, created_unix=_time.time(), degraded=degraded)

@@ -96,7 +96,12 @@ def oracle_best(p: GemmProblem, hw: Topology, device: Device,
     ``prune=False`` to force a fully measured sweep (e.g. wall-clock
     devices where even an admissible analytic bound is unwanted).
     ``order`` visits candidates in the given index order (best model rank
-    first makes the bound bite immediately)."""
+    first makes the bound bite immediately).
+
+    Measurements that are non-finite, non-positive (a NaN-poisoned or
+    sign-flipped timer would otherwise *win* the argmin), or that raise a
+    runtime error are skipped — the oracle reports the best candidate the
+    device measured honestly (DESIGN.md §9)."""
     best_t, best_s = None, float("inf")
     pruned = 0
     idxs = order if order is not None else range(len(candidates))
@@ -106,7 +111,12 @@ def oracle_best(p: GemmProblem, hw: Topology, device: Device,
                 and _compute_lower_bound(p, t, hw) >= best_s:
             pruned += 1
             continue
-        s = device.gemm_time(p, t)
+        try:
+            s = device.gemm_time(p, t)
+        except RuntimeError:
+            continue
+        if not np.isfinite(s) or s <= 0.0:
+            continue
         if s < best_s:
             best_t, best_s = t, s
     return best_t, best_s, pruned
@@ -122,6 +132,10 @@ def fidelity_row(hw: Topology, name: str, M: int, N: int, K: int,
     best_t, best_s, _ = oracle_best(p, hw, device, cands,
                                     prune=prune, order=order)
     sel_s = device.gemm_time(p, sel.config)
+    if best_t is None:
+        # Every candidate measurement was poisoned/raised: degrade to the
+        # analytical selection as its own oracle rather than crash.
+        best_t, best_s = sel.config, sel_s
     # Where did the model rank the device's true optimum?
     oracle_i = cands.index(best_t)
     rank = 1 + int(np.sum(scores < scores[oracle_i]))

@@ -26,14 +26,66 @@ The sweeps, and what their slopes/intercepts mean (``fit.py``):
 Window targeting walks the declared capacity chain — capacities and core
 counts are structural datasheet facts; calibration measures *rates*
 (paper §V-E: retarget by swapping measured constants only).
+
+Fail-soft measurement (DESIGN.md §9): every probe call can be bounded by a
+watchdog ``deadline_s`` — a hung device (wedged driver, injected hang)
+raises :class:`ProbeTimeout` inside the watchdog instead of wedging the
+calibration run, and the sample is *dropped*, not recorded.  Samples that
+come back non-finite or non-positive (NaN poison, sign flips — physically
+impossible times) are dropped the same way; per-sweep drop counts land in
+``params["n_dropped"]`` so provenance shows how degraded a sweep was.
+Outliers are NOT dropped here: plausible-but-wrong values are the robust
+fit's job (Theil–Sen), not the measurement layer's.
 """
 from __future__ import annotations
 
+import math
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.calib.device import Device
 from repro.core.topology import Topology, reference_dtype
+
+
+class ProbeTimeout(RuntimeError):
+    """A probe call exceeded its watchdog deadline (hung device/driver)."""
+
+
+def _measure(fn: Callable[[], float],
+             deadline_s: Optional[float]) -> float:
+    """Run one timing call under the watchdog.  ``deadline_s=None`` means
+    unbounded (the trusted-substrate fast path: no thread hop)."""
+    if deadline_s is None:
+        return fn()
+    ex = ThreadPoolExecutor(max_workers=1)
+    try:
+        fut = ex.submit(fn)
+        try:
+            return fut.result(timeout=deadline_s)
+        except _FuturesTimeout:
+            fut.cancel()
+            raise ProbeTimeout(
+                f"probe call exceeded watchdog deadline {deadline_s:g}s"
+            ) from None
+    finally:
+        # Don't block on a wedged worker — it is left to die with the
+        # process (the injected-hang case sleeps bounded time anyway).
+        ex.shutdown(wait=False)
+
+
+def _guarded(fn: Callable[[], float],
+             deadline_s: Optional[float]) -> Optional[float]:
+    """One guarded sample: None (dropped) on watchdog timeout or a
+    non-finite / non-positive measurement; the honest value otherwise."""
+    try:
+        y = _measure(fn, deadline_s)
+    except ProbeTimeout:
+        return None
+    if not math.isfinite(y) or y <= 0.0:
+        return None
+    return y
 
 # Target wall times per sweep point.  Sweep sizes (bytes, atoms, chunk
 # counts) are derived from these and the *base* preset's order-of-magnitude
@@ -98,6 +150,7 @@ def level_windows(base: Topology) -> List[Tuple[int, str, int]]:
 def probe_stream_levels(device: Device, base: Topology, *,
                         n_chunks: int = 64,
                         targets: Sequence[float] = STREAM_TARGETS_S,
+                        deadline_s: Optional[float] = None,
                         ) -> Dict[str, ProbeSweep]:
     """Per-level bandwidth sweeps: fixed window, nbytes varied.  nbytes per
     point is sized from the level's *preset* bandwidth to hit the target
@@ -106,33 +159,49 @@ def probe_stream_levels(device: Device, base: Topology, *,
     out: Dict[str, ProbeSweep] = {}
     for idx, name, window in level_windows(base):
         bw = base.levels[idx].bandwidth
-        samples = tuple(
-            (nb, device.stream_time(nb, window, n_chunks))
-            for nb in (float(max(2 * window, int(T * bw)))
-                       for T in targets))
+        samples: List[Tuple[float, float]] = []
+        dropped = 0
+        for T in targets:
+            nb = float(max(2 * window, int(T * bw)))
+            y = _guarded(lambda: device.stream_time(nb, window, n_chunks),
+                         deadline_s)
+            if y is None:
+                dropped += 1
+            else:
+                samples.append((nb, y))
         out[f"stream:{name}"] = ProbeSweep(
             kind="stream", target=name,
-            params={"window": window, "n_chunks": n_chunks},
-            samples=samples)
+            params={"window": window, "n_chunks": n_chunks,
+                    "n_dropped": dropped},
+            samples=tuple(samples))
     return out
 
 
 def probe_latency(device: Device, base: Topology,
-                  targets: Sequence[float] = LATENCY_TARGETS_S) -> ProbeSweep:
+                  targets: Sequence[float] = LATENCY_TARGETS_S,
+                  deadline_s: Optional[float] = None) -> ProbeSweep:
     """Single-pass small transfers: ``window == nbytes``, one chunk — the
     intercept over nbytes is launch + first-byte latency + issue cost.
     Transfers are kept small (sub-launch-scale) so the intercept
     extrapolation stays short."""
     bw = base.backing.bandwidth
-    samples = tuple(
-        (nb, device.stream_time(nb, int(nb), 1))
-        for nb in (float(max(int(T * bw), 1)) for T in targets))
+    samples: List[Tuple[float, float]] = []
+    dropped = 0
+    for T in targets:
+        nb = float(max(int(T * bw), 1))
+        y = _guarded(lambda: device.stream_time(nb, int(nb), 1), deadline_s)
+        if y is None:
+            dropped += 1
+        else:
+            samples.append((nb, y))
     return ProbeSweep(kind="latency", target=base.backing.name,
-                      params={"n_chunks": 1}, samples=samples)
+                      params={"n_chunks": 1, "n_dropped": dropped},
+                      samples=tuple(samples))
 
 
 def probe_issue(device: Device, base: Topology,
-                targets: Sequence[float] = ISSUE_TARGETS_S) -> ProbeSweep:
+                targets: Sequence[float] = ISSUE_TARGETS_S,
+                deadline_s: Optional[float] = None) -> ProbeSweep:
     """DMA-issue cost: chunk-count sweep at fixed (small) bytes and window
     so the constant byte term stays small next to the issue term.  Chunk
     counts are sized from the preset ``dma_fixed``."""
@@ -140,29 +209,44 @@ def probe_issue(device: Device, base: Topology,
     nbytes = float(2 * window)
     dma = base.dma_fixed or 1e-9
     chunks = sorted({max(1, int(T / dma)) for T in targets})
-    samples = tuple(
-        (float(c), device.stream_time(nbytes, window, c)) for c in chunks)
+    samples: List[Tuple[float, float]] = []
+    dropped = 0
+    for c in chunks:
+        y = _guarded(lambda: device.stream_time(nbytes, window, c),
+                     deadline_s)
+        if y is None:
+            dropped += 1
+        else:
+            samples.append((float(c), y))
     return ProbeSweep(kind="issue", target="",
-                      params={"window": window, "nbytes": nbytes},
-                      samples=samples)
+                      params={"window": window, "nbytes": nbytes,
+                              "n_dropped": dropped},
+                      samples=tuple(samples))
 
 
 def probe_compute(device: Device, base: Topology, dtype: str,
-                  targets: Sequence[float] = COMPUTE_TARGETS_S) -> ProbeSweep:
+                  targets: Sequence[float] = COMPUTE_TARGETS_S,
+                  deadline_s: Optional[float] = None) -> ProbeSweep:
     """Issue-rate sweep for one dtype: n resident macro-atoms back-to-back,
     n sized from the preset peak to hit the target wall times."""
     mm, mn, mk = base.mxu_shape
     atom_flops = 2.0 * mm * mn * mk
     peak = base.flops(dtype)
     lanes = base.total_cores()      # chip-wide rate needs every core busy
-    samples = tuple(
-        (float(n), device.compute_time(dtype, n, lanes))
-        for n in (max(16 * lanes, int(T * peak / atom_flops))
-                  for T in targets))
+    samples: List[Tuple[float, float]] = []
+    dropped = 0
+    for T in targets:
+        n = max(16 * lanes, int(T * peak / atom_flops))
+        y = _guarded(lambda: device.compute_time(dtype, n, lanes),
+                     deadline_s)
+        if y is None:
+            dropped += 1
+        else:
+            samples.append((float(n), y))
     return ProbeSweep(kind="compute", target=dtype,
                       params={"mxu_m": mm, "mxu_n": mn, "mxu_k": mk,
-                              "n_parallel": lanes},
-                      samples=samples)
+                              "n_parallel": lanes, "n_dropped": dropped},
+                      samples=tuple(samples))
 
 
 def _wave_unit_atoms(base: Topology) -> int:
@@ -176,33 +260,53 @@ def _wave_unit_atoms(base: Topology) -> int:
 
 def probe_wave(device: Device, base: Topology, *,
                unit_atoms: Optional[int] = None,
-               multiples: Sequence[int] = WAVE_MULTIPLES) -> ProbeSweep:
+               multiples: Sequence[int] = WAVE_MULTIPLES,
+               deadline_s: Optional[float] = None) -> ProbeSweep:
     """Wave-latency staircase: unit counts in exact multiples of the
     declared core count (x == wave count), plus the C / C+1 cliff pair."""
     if unit_atoms is None:
         unit_atoms = _wave_unit_atoms(base)
     C = base.total_cores()
     ref = reference_dtype(base.peak_flops)
-    samples = [(float(k), device.wave_time(k * C, unit_atoms, ref))
-               for k in multiples]
-    cliff = ((float(C), device.wave_time(C, unit_atoms, ref)),
-             (float(C + 1), device.wave_time(C + 1, unit_atoms, ref)))
+    samples: List[Tuple[float, float]] = []
+    dropped = 0
+    for k in multiples:
+        y = _guarded(lambda: device.wave_time(k * C, unit_atoms, ref),
+                     deadline_s)
+        if y is None:
+            dropped += 1
+        else:
+            samples.append((float(k), y))
+    cliff = []
+    for units in (C, C + 1):
+        y = _guarded(lambda: device.wave_time(units, unit_atoms, ref),
+                     deadline_s)
+        if y is None:
+            dropped += 1
+            y = float("nan")          # provenance-only; never fitted
+        cliff.append(y)
     return ProbeSweep(kind="wave", target=ref,
                       params={"unit_atoms": unit_atoms, "cores": C,
                               "cliff_units": C,
-                              "cliff_before_s": cliff[0][1],
-                              "cliff_after_s": cliff[1][1]},
+                              "cliff_before_s": cliff[0],
+                              "cliff_after_s": cliff[1],
+                              "n_dropped": dropped},
                       samples=tuple(samples))
 
 
 def run_probes(device: Device, base: Topology, *,
                dtypes: Optional[Sequence[str]] = None,
+               deadline_s: Optional[float] = None,
                ) -> Dict[str, ProbeSweep]:
-    """The full probe suite for one device against one base topology."""
-    sweeps = probe_stream_levels(device, base)
-    sweeps["latency"] = probe_latency(device, base)
-    sweeps["issue"] = probe_issue(device, base)
+    """The full probe suite for one device against one base topology.
+
+    ``deadline_s`` bounds every individual timing call with the watchdog
+    (None -> trust the device not to hang)."""
+    sweeps = probe_stream_levels(device, base, deadline_s=deadline_s)
+    sweeps["latency"] = probe_latency(device, base, deadline_s=deadline_s)
+    sweeps["issue"] = probe_issue(device, base, deadline_s=deadline_s)
     for dt in (dtypes if dtypes is not None else sorted(base.peak_flops)):
-        sweeps[f"compute:{dt}"] = probe_compute(device, base, dt)
-    sweeps["wave"] = probe_wave(device, base)
+        sweeps[f"compute:{dt}"] = probe_compute(device, base, dt,
+                                                deadline_s=deadline_s)
+    sweeps["wave"] = probe_wave(device, base, deadline_s=deadline_s)
     return sweeps

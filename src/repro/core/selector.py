@@ -18,14 +18,16 @@ import itertools
 import json
 import os
 import tempfile
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.hardware import TPU_V5E
-from repro.core.topology import (SCHEDULES, HardwareSpec,
+from repro.core.topology import (SCHEDULES, HardwareSpec, _is_pow2,
                                  topology_fingerprint)
 from repro.core.latency import (
     EPILOGUE_NONE,
@@ -378,6 +380,79 @@ def rank_candidates(
     return scored
 
 
+# ---------------------------------------------------------------------------
+# Fail-soft selection validation + fallback ladder (DESIGN.md §9).
+#
+# A Selection reaching a kernel launch may be wrong in ways the happy path
+# never produces: a corrupted cache entry rehydrated into nonsense dims, a
+# memo poisoned by a buggy hook, a config whose placement no longer fits a
+# recalibrated topology.  ``validate_selection`` re-checks the invariants
+# the selector guarantees by construction; ``fallback_ladder`` yields the
+# deterministic downgrade sequence the launch layer (kernels/ops.py) walks
+# when a validated config still fails to compile or launch.
+# ---------------------------------------------------------------------------
+
+
+def validate_selection(p: GemmProblem, t: TileConfig,
+                       hw: HardwareSpec) -> Optional[str]:
+    """Re-validate a config against the invariants every selector-produced
+    candidate satisfies by construction.  Returns a reason string when the
+    config must not be launched, None when it is safe."""
+    for name, v in (("bm", t.bm), ("bn", t.bn), ("bk", t.bk),
+                    ("split_k", t.split_k), ("group_m", t.group_m)):
+        if not isinstance(v, int) or not _is_pow2(v):
+            return f"{name}={v!r} is not a positive power of two"
+    if t.schedule not in SCHEDULES:
+        return f"schedule {t.schedule!r} not in {SCHEDULES}"
+    if t.bm % hw.sublane(p.in_dtype) or t.bn % hw.lane_width \
+            or t.bk % hw.lane_width:
+        return (f"{t} misaligned for {p.in_dtype} on {hw.name} "
+                f"(sublane {hw.sublane(p.in_dtype)}, lane {hw.lane_width})")
+    if not fits_placement(t, p.in_dtype, hw):
+        return f"{t} exceeds a placement-level budget on {hw.name}"
+    lat = gemm_latency(p, t, hw)
+    if not np.isfinite(lat.total) or lat.total <= 0.0:
+        return f"{t} prices to a non-finite/non-positive latency on {hw.name}"
+    return None
+
+
+def safe_config(p: GemmProblem, hw: HardwareSpec = TPU_V5E) -> TileConfig:
+    """The conservative rung of the fallback ladder: the smallest aligned
+    entry of every menu, no split-K, no grouping, the sequential schedule —
+    the minimum-working-set config, guaranteed to fit placement whenever
+    *any* candidate does."""
+    sub, lane = hw.sublane(p.in_dtype), hw.lane_width
+    bm = min((m for m in hw.bm_menu if m % sub == 0), default=sub)
+    bn = min((m for m in hw.bn_menu if m % lane == 0), default=lane)
+    bk = min((m for m in hw.bk_menu if m % lane == 0), default=lane)
+    return TileConfig(bm=bm, bn=bn, bk=bk, split_k=1, group_m=1,
+                      schedule="data_parallel")
+
+
+def fallback_ladder(p: GemmProblem, hw: HardwareSpec,
+                    primary: TileConfig,
+                    ) -> Iterator[Tuple["Selection", str]]:
+    """The deterministic downgrade sequence after ``primary`` failed to
+    validate or launch: the next-ranked candidate under the model, then
+    the conservative :func:`safe_config`.  (The final reference-kernel
+    rung is the launch layer's, not a TileConfig.)  Lazily ranks the
+    space — the happy path never pays for it."""
+    def _sel(t: TileConfig, n: int) -> "Selection":
+        return Selection(problem=p, config=t,
+                         predicted=gemm_latency(p, t, hw),
+                         hardware=hw.name, n_candidates=n)
+
+    tried = [primary]
+    ranked = rank_candidates(p, hw)
+    nxt = next((t for t, _ in ranked if t not in tried), None)
+    if nxt is not None:
+        tried.append(nxt)
+        yield _sel(nxt, len(ranked)), "next"
+    safe = safe_config(p, hw)
+    if safe not in tried:
+        yield _sel(safe, len(ranked)), "safe"
+
+
 _CACHE: Dict[Tuple, Selection] = {}
 
 # ---------------------------------------------------------------------------
@@ -413,16 +488,20 @@ _topo_fingerprint = topology_fingerprint
 #
 # The oracle/fidelity harness and the calibration tests need to observe
 # *where* each selection came from — fresh cold scoring ("cold"), the
-# persistent disk table ("disk"), or the in-process memo ("memo") — to
-# prove end-to-end that e.g. a recalibrated topology really re-scored
-# instead of warm-starting stale configs.  Hooks must not raise.
+# persistent disk table ("disk"), the in-process memo ("memo"), or a
+# fail-soft ladder step ("fallback:<rung>", kernels/ops.py) — to prove
+# end-to-end that e.g. a recalibrated topology really re-scored instead
+# of warm-starting stale configs, and that every degraded launch is
+# observable.  A hook that raises is logged and skipped: observability
+# must never abort selection (DESIGN.md §9).
 # ---------------------------------------------------------------------------
 
 _SELECTION_HOOKS: List[Callable[["Selection", str], None]] = []
 
 
 def add_selection_hook(fn: Callable[["Selection", str], None]) -> None:
-    """Register ``fn(selection, source)``; source in {memo, disk, cold}."""
+    """Register ``fn(selection, source)``; source in {memo, disk, cold}
+    or ``fallback:<rung>`` for fail-soft ladder steps."""
     _SELECTION_HOOKS.append(fn)
 
 
@@ -432,7 +511,20 @@ def remove_selection_hook(fn: Callable[["Selection", str], None]) -> None:
 
 def _emit_selection(sel: "Selection", source: str) -> None:
     for fn in list(_SELECTION_HOOKS):
-        fn(sel, source)
+        try:
+            fn(sel, source)
+        except Exception as e:                      # noqa: BLE001
+            warnings.warn(
+                f"selection hook {getattr(fn, '__name__', fn)!r} raised "
+                f"{e!r} on source {source!r}; hook skipped",
+                RuntimeWarning, stacklevel=2)
+
+
+def emit_fallback(sel: "Selection", rung: str) -> None:
+    """Report a fail-soft ladder step (``kernels/ops.py``) through the
+    selection hooks as source ``fallback:<rung>``; rung in
+    {next, safe, reference}."""
+    _emit_selection(sel, f"fallback:{rung}")
 
 
 def load_selection_cache(path: Optional[str] = None) -> int:
@@ -584,13 +676,14 @@ def select_gemm_config(
         # reprice it O(1) — no enumeration, no scoring pass.  A malformed
         # entry, one recorded under different topology constants (the key
         # carries hw.name, the entry a content fingerprint — recalibration
-        # changes the argmin), or one that no longer fits the placement
-        # levels falls through to cold scoring.
+        # changes the argmin), or one whose config fails the selection
+        # invariants (placement budget, alignment, power-of-two dims — a
+        # tampered-but-parseable cache entry) falls through to cold scoring.
         try:
             best = TileConfig(**entry["config"])
             n_cands = int(entry["n_candidates"])
             legal = (entry.get("topo") == _topo_fingerprint(hw)
-                     and fits_placement(best, p.in_dtype, hw))
+                     and validate_selection(p, best, hw) is None)
         except (KeyError, TypeError, ValueError):
             legal = False
         if legal:

@@ -35,6 +35,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
+import warnings
 import weakref
 from dataclasses import dataclass, field
 from typing import Dict, Mapping, Optional, Tuple
@@ -388,6 +390,87 @@ def load_calibrated_topology(text: str) -> Tuple[Topology, Dict]:
             f"calibrated-topology artifact for {topo.name!r} is corrupt: "
             f"recorded fingerprint {recorded!r} != recomputed {actual!r} "
             f"(constants were edited after the fit)")
+    return topo, prov
+
+
+class DegradedModeWarning(UserWarning):
+    """A component fell back to a degraded-but-safe mode (stock preset,
+    conservative config, reference kernel) instead of raising.  Emitted as
+    a structured warning so serving stacks can count/route it without
+    string-matching log lines (DESIGN.md §9)."""
+
+
+def quarantine_artifact(path: str) -> str:
+    """Move a rejected artifact aside to a ``.quarantined`` sidecar (never
+    delete evidence: the sidecar is what a post-mortem fits the fault
+    from).  An existing sidecar is overwritten — the newest rejection is
+    the one worth keeping."""
+    sidecar = path + ".quarantined"
+    os.replace(path, sidecar)
+    return sidecar
+
+
+def load_calibrated_topology_guarded(
+    path: str,
+    fallback: Topology,
+    *,
+    max_residual: Optional[float] = 0.5,
+    quarantine: bool = True,
+) -> Tuple[Topology, Dict]:
+    """Fail-soft artifact loading for serving paths (DESIGN.md §9).
+
+    :func:`load_calibrated_topology` raises on a truncated / tampered /
+    wrong-schema artifact — correct for tools, fatal for a server whose
+    calibration file rotted on disk.  This wrapper never raises on a bad
+    artifact: the file is quarantined to a ``.quarantined`` sidecar, a
+    :class:`DegradedModeWarning` is emitted, and the ``fallback`` preset
+    is returned so serving continues on stock constants.
+
+    ``max_residual`` additionally rejects artifacts whose recorded fit
+    residuals (rel RMS per fitted field) exceed the threshold — a fit that
+    barely described its own measurements must not silently steer every
+    selection.  Pass ``None`` to skip the residual gate.
+
+    Returns ``(topology, provenance)``; a degraded load's provenance
+    carries ``degraded`` (the reason) and ``quarantined`` (sidecar path,
+    or None when quarantining was disabled or impossible).
+    """
+    def _degrade(reason: str) -> Tuple[Topology, Dict]:
+        sidecar = None
+        if quarantine and os.path.exists(path):
+            try:
+                sidecar = quarantine_artifact(path)
+            except OSError:
+                pass
+        warnings.warn(
+            f"calibrated-topology artifact {path!r} rejected ({reason}); "
+            f"serving on stock preset {fallback.name!r}"
+            + (f"; artifact quarantined to {sidecar!r}" if sidecar else ""),
+            DegradedModeWarning, stacklevel=3)
+        return fallback, {"degraded": reason, "quarantined": sidecar}
+
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        # Nothing to quarantine — the file is unreadable/absent.
+        warnings.warn(
+            f"calibrated-topology artifact {path!r} unreadable ({e}); "
+            f"serving on stock preset {fallback.name!r}",
+            DegradedModeWarning, stacklevel=2)
+        return fallback, {"degraded": f"unreadable: {e}", "quarantined": None}
+    try:
+        topo, prov = load_calibrated_topology(text)
+    except (ValueError, KeyError, TypeError) as e:
+        return _degrade(str(e) or type(e).__name__)
+    if max_residual is not None:
+        residuals = prov.get("residuals") or {}
+        worst = max(residuals.values(), default=0.0)
+        if worst > max_residual:
+            worst_field = max(residuals, key=residuals.get)
+            return _degrade(
+                f"fit residual out of tolerance: {worst_field} = "
+                f"{worst:.3g} > {max_residual:.3g}")
     return topo, prov
 
 

@@ -13,26 +13,37 @@ Backends
 Selection happens at *trace time* from static shapes via
 ``repro.core.select_gemm_config`` — the tritonBLAS contract: zero autotuning,
 deterministic, memoised.
+
+Fail-soft launch (DESIGN.md §9): selector-driven launches re-validate the
+selection before lowering and, on a kernel compile/launch failure, walk a
+deterministic fallback ladder — next-ranked candidate, conservative safe
+config, reference kernel — each transient-retried and each downgrade
+reported through the selection hooks as a ``fallback:<rung>`` source.
+Explicitly-passed ``config`` objects are the caller's contract and never
+silently swapped: they get the transient retry but not the ladder.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple, Union
+import warnings
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dtypes import DTYPE_BYTES
 from repro.core.hardware import TPU_V5E
-from repro.core.topology import HardwareSpec
+from repro.core.topology import DegradedModeWarning, HardwareSpec
 from repro.core.latency import EPILOGUE_NONE, Epilogue, TileConfig, cdiv
-from repro.core.selector import select_gemm_config
+from repro.core.selector import (Selection, emit_fallback, fallback_ladder,
+                                 select_gemm_config, validate_selection)
 from repro.kernels import ref
 from repro.kernels.flash_attention import (
     flash_attention_pallas,
     select_attention_blocks,
 )
 from repro.kernels.matmul import matmul_pallas
+from repro.runtime.fault_tolerance import retry
 
 _BACKENDS = ("pallas", "pallas_interpret", "reference")
 _backend_override: Optional[str] = None
@@ -55,6 +66,54 @@ def get_backend() -> str:
             raise ValueError(f"REPRO_KERNEL_BACKEND={env!r} not in {_BACKENDS}")
         return env
     return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+# ---------------------------------------------------------------------------
+# Default serving hardware.  Call sites that don't pass ``hw`` price their
+# selections against this topology; ``launch/serve.py`` points it at a
+# calibrated-topology artifact (or its stock-preset fallback when the
+# artifact was quarantined).  ``None`` -> the tpu_v5e preset.
+# ---------------------------------------------------------------------------
+
+_hw_override: Optional[HardwareSpec] = None
+
+
+def set_default_hardware(hw: Optional[HardwareSpec]) -> None:
+    """Set the topology used when call sites omit ``hw`` (None -> preset)."""
+    global _hw_override
+    _hw_override = hw
+
+
+def get_default_hardware() -> HardwareSpec:
+    return _hw_override if _hw_override is not None else TPU_V5E
+
+
+# ---------------------------------------------------------------------------
+# Launch fault injection (the chaos harness's hook, repro.calib.faults).
+# When set, the injector is invoked with the TileConfig about to launch and
+# may raise — a transient-marked error exercises the retry path, anything
+# else the fallback ladder.  Never set in production.
+# ---------------------------------------------------------------------------
+
+_launch_fault_injector: Optional[Callable[[TileConfig], None]] = None
+
+
+def set_launch_fault_injector(
+        fn: Optional[Callable[[TileConfig], None]]
+) -> Optional[Callable[[TileConfig], None]]:
+    """Install (or clear, with None) the launch fault injector; returns
+    the previous injector so tests can restore it."""
+    global _launch_fault_injector
+    prev = _launch_fault_injector
+    _launch_fault_injector = fn
+    return prev
+
+
+# Transient-retry policy for kernel launches: short, capped backoff — a
+# launch retry protects against injected/driver transients, not outages.
+_LAUNCH_RETRIES = 2
+_LAUNCH_BASE_DELAY = 0.01
+_LAUNCH_MAX_DELAY = 0.1
 
 
 def _dtype_name(x) -> str:
@@ -108,7 +167,7 @@ def matmul(
     b: jax.Array,
     *,
     out_dtype=None,
-    hw: HardwareSpec = TPU_V5E,
+    hw: Optional[HardwareSpec] = None,
     config: Optional[TileConfig] = None,
     backend: Optional[str] = None,
     epilogue: Optional[Union[str, Epilogue]] = None,
@@ -136,6 +195,7 @@ def matmul(
     a stream_k selection here is valid and numerically identical.
     """
     be = backend or get_backend()
+    hw = hw if hw is not None else get_default_hardware()
     out_dtype = out_dtype or a.dtype
     ep = _normalize_epilogue(epilogue, bias, gate, residual)
     lead = a.shape[:-2] if a.ndim > 2 else ()
@@ -147,34 +207,84 @@ def matmul(
     gate2 = gate.reshape(M, N) if gate is not None else None
     res2 = residual.reshape(M, N) if residual is not None else None
 
-    if be == "reference":
+    def _reference() -> jax.Array:
         out = ref.matmul_ref(a2, b, out_dtype=out_dtype, epilogue=ep,
                              bias=bias, gate=gate2, residual=res2)
         return out.reshape(*lead, a.shape[-2], N) if lead else out
 
+    if be == "reference":
+        return _reference()
+
+    selected: Optional[Selection] = None
     if config is None:
-        sel = select_gemm_config(M, N, K,
-                                 in_dtype=_dtype_name(a.dtype),
-                                 out_dtype=_model_dtype_name(out_dtype),
-                                 epilogue=ep,
-                                 hw=hw)
-        config = sel.config
+        selected = select_gemm_config(M, N, K,
+                                      in_dtype=_dtype_name(a.dtype),
+                                      out_dtype=_model_dtype_name(out_dtype),
+                                      epilogue=ep,
+                                      hw=hw)
+        config = selected.config
     interpret = be == "pallas_interpret"
 
-    sk = config.split_k
-    a_p = _pad2(a2, config.bm, config.bk * sk)
-    b_p = _pad2(b, config.bk * sk, config.bn)
-    kw = {}
-    if ep.bias:
-        kw["bias"] = _pad2(bias.reshape(1, N), 1, config.bn)
-    if gate2 is not None:
-        kw["gate"] = _pad2(gate2, config.bm, config.bn)
-    if res2 is not None:
-        kw["residual"] = _pad2(res2, config.bm, config.bn)
-    out = matmul_pallas(a_p, b_p, config, out_dtype=out_dtype, epilogue=ep,
-                        interpret=interpret, **kw)
-    out = out[:M, :N]
-    return out.reshape(*lead, a.shape[-2], N) if lead else out
+    def _launch(cfg: TileConfig) -> jax.Array:
+        if _launch_fault_injector is not None:
+            _launch_fault_injector(cfg)
+        sk = cfg.split_k
+        a_p = _pad2(a2, cfg.bm, cfg.bk * sk)
+        b_p = _pad2(b, cfg.bk * sk, cfg.bn)
+        kw = {}
+        if ep.bias:
+            kw["bias"] = _pad2(bias.reshape(1, N), 1, cfg.bn)
+        if gate2 is not None:
+            kw["gate"] = _pad2(gate2, cfg.bm, cfg.bn)
+        if res2 is not None:
+            kw["residual"] = _pad2(res2, cfg.bm, cfg.bn)
+        out = matmul_pallas(a_p, b_p, cfg, out_dtype=out_dtype, epilogue=ep,
+                            interpret=interpret, **kw)
+        out = out[:M, :N]
+        return out.reshape(*lead, a.shape[-2], N) if lead else out
+
+    def _try(cfg: TileConfig) -> jax.Array:
+        return retry(_launch, cfg, retries=_LAUNCH_RETRIES,
+                     base_delay=_LAUNCH_BASE_DELAY,
+                     max_delay=_LAUNCH_MAX_DELAY)
+
+    if selected is None:
+        # Explicit config: the caller's contract.  Transient-retry the
+        # launch, but never silently substitute a different config —
+        # deterministic failures propagate.
+        return _try(config)
+
+    # Selector-driven launch: re-validate before lowering, then walk the
+    # deterministic fallback ladder on any launch failure (DESIGN.md §9).
+    p = selected.problem
+    reason = validate_selection(p, config, hw)
+    first_err: Optional[Exception] = None
+    if reason is None:
+        try:
+            return _try(config)
+        except Exception as e:                      # noqa: BLE001
+            first_err = e
+            reason = f"launch failed: {e!r}"
+    warnings.warn(
+        f"selected config {config} rejected ({reason}); "
+        f"walking fallback ladder", DegradedModeWarning, stacklevel=2)
+    for sel_f, rung in fallback_ladder(p, hw, config):
+        if validate_selection(p, sel_f.config, hw) is not None:
+            continue
+        emit_fallback(sel_f, rung)
+        try:
+            return _try(sel_f.config)
+        except Exception as e:                      # noqa: BLE001
+            first_err = first_err or e
+            continue
+    # Every tiled rung failed — the reference oracle is semantically
+    # identical and cannot mis-tile; report it as the final rung.
+    emit_fallback(selected, "reference")
+    warnings.warn(
+        f"all tiled fallbacks failed for {p.M}x{p.N}x{p.K} "
+        f"(first error: {first_err!r}); serving reference kernel",
+        DegradedModeWarning, stacklevel=2)
+    return _reference()
 
 
 def expert_matmul(
@@ -182,7 +292,7 @@ def expert_matmul(
     w: jax.Array,
     *,
     out_dtype=None,
-    hw: HardwareSpec = TPU_V5E,
+    hw: Optional[HardwareSpec] = None,
     backend: Optional[str] = None,
     epilogue: Optional[Union[str, Epilogue]] = None,
     bias: Optional[jax.Array] = None,
@@ -198,6 +308,7 @@ def expert_matmul(
     E dim: bias (E, N), gate/residual (E, M, N).
     """
     be = backend or get_backend()
+    hw = hw if hw is not None else get_default_hardware()
     out_dtype = out_dtype or x.dtype
     ep = _normalize_epilogue(epilogue, bias, gate, residual)
 
@@ -239,12 +350,13 @@ def flash_attention(
     *,
     causal: bool = False,
     scale: Optional[float] = None,
-    hw: HardwareSpec = TPU_V5E,
+    hw: Optional[HardwareSpec] = None,
     blocks: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
     """Selector-driven attention. q: (B,H,Sq,d), k/v: (B,Hkv,Skv,d)."""
     be = backend or get_backend()
+    hw = hw if hw is not None else get_default_hardware()
     if be == "reference":
         return ref.attention_ref(q, k, v, causal=causal, scale=scale)
 

@@ -9,11 +9,23 @@ decode cache), then step-synchronous decode with temperature sampling.
 Set ``REPRO_SELECTION_CACHE=/path/to/selections.json`` to persist GEMM
 config selections across server processes: a warm restart replays every
 previously selected shape from disk with zero cold-path scoring.
+
+Fail-soft serving (DESIGN.md §9): ``--topology`` loads a
+calibrated-topology artifact through the *guarded* loader — a corrupt or
+out-of-tolerance artifact is quarantined and serving continues on the
+stock preset; prefill and every decode step are transient-retried; a
+:class:`~repro.runtime.fault_tolerance.PreemptionGuard` drains the batch
+cleanly on SIGTERM/SIGINT (tokens decoded so far are returned, the guard's
+handlers are restored on exit); a
+:class:`~repro.runtime.fault_tolerance.StragglerMonitor` flags slow decode
+steps.  ``run_serving`` is the library entry point the fault-injection
+suite drives directly (``decode_fault`` hook); ``main`` is the CLI shim.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -21,15 +33,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.hardware import TPU_V5E
 from repro.core.selector import load_selection_cache
+from repro.core.topology import load_calibrated_topology_guarded
 from repro.distributed import (batch_shardings, cache_shardings,
                                param_shardings, replicated)
+from repro.kernels import ops
 from repro.launch.mesh import make_local_mesh
 from repro.nn.frontends import synth_frontend_inputs
 from repro.nn.model import Model
+from repro.runtime.fault_tolerance import (PreemptionGuard, StragglerMonitor,
+                                           retry)
+
+# Transient-retry policy for serving steps: short backoff — a decode step
+# retry covers injected/driver transients, not sustained outages.
+_STEP_RETRIES = 2
+_STEP_BASE_DELAY = 0.01
+_STEP_MAX_DELAY = 0.1
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
@@ -39,11 +62,48 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--topology", default=None, metavar="PATH",
+                    help="calibrated-topology artifact to select against "
+                         "(guarded load: corrupt artifacts quarantine and "
+                         "fall back to the stock preset)")
+    return ap
 
+
+def run_serving(args: argparse.Namespace, *,
+                decode_fault: Optional[Callable[..., None]] = None,
+                ) -> Dict:
+    """Run one continuous batch end to end; returns the serving stats.
+
+    ``decode_fault(step, guard)``, when given, runs at the top of every
+    decode step's retried body — *before* the donated-cache decode
+    executes, so a raise is retried against an intact cache.  This is the
+    fault-injection suite's hook (``repro.calib.faults.decode_injector``);
+    production never sets it.
+
+    Returns a dict with ``tokens`` (the (batch, steps) generated array),
+    ``drained`` (True when a preemption request stopped decode early),
+    ``steps`` (decode steps completed), ``retries`` (transient retries
+    absorbed), ``stragglers``, timings, and the topology served against
+    (plus ``degraded`` when the artifact was rejected).
+    """
     n_warm = load_selection_cache()            # $REPRO_SELECTION_CACHE
     if n_warm:
         print(f"[selector] warm-started {n_warm} persisted GEMM selections")
+
+    topo_info: Dict = {"topology": TPU_V5E.name, "degraded": None}
+    if getattr(args, "topology", None):
+        topo, prov = load_calibrated_topology_guarded(args.topology, TPU_V5E)
+        ops.set_default_hardware(topo)
+        topo_info = {"topology": topo.name,
+                     "degraded": prov.get("degraded"),
+                     "quarantined": prov.get("quarantined")}
+        if prov.get("degraded"):
+            print(f"[serve] topology artifact rejected "
+                  f"({prov['degraded']}); serving on stock "
+                  f"preset {topo.name}")
+        else:
+            print(f"[serve] serving against calibrated topology "
+                  f"{topo.name}")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
@@ -58,9 +118,21 @@ def main() -> int:
                                  0, cfg.vocab_size)
     extras = synth_frontend_inputs(cfg, rng, args.batch, args.prompt_len)
 
+    retries = 0
+
+    def _count_retry(attempt: int, err: Exception) -> None:
+        nonlocal retries
+        retries += 1
+        print(f"[serve] transient fault absorbed "
+              f"(attempt {attempt + 1}): {err!r}")
+
     # Prefill: logits for the last prompt position + the decode cache.
+    prefill = jax.jit(model.prefill)
     t0 = time.time()
-    logits, cache = jax.jit(model.prefill)(params, prompts, extras or None)
+    logits, cache = retry(
+        lambda: prefill(params, prompts, extras or None),
+        retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
+        max_delay=_STEP_MAX_DELAY, on_retry=_count_retry)
     logits.block_until_ready()
     t_prefill = time.time() - t0
 
@@ -76,31 +148,70 @@ def main() -> int:
     cache = jax.tree_util.tree_map(place, full_cache, cache)
 
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    straggler = StragglerMonitor(window=16, min_steps=4)
     sample_rng = rng
     tokens = jnp.argmax(logits, axis=-1)
     out = [np.asarray(tokens)]
+    drained = False
     t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, cache, tokens, pos)
-        sample_rng, sub = jax.random.split(sample_rng)
-        if args.temperature > 0:
-            tokens = jax.random.categorical(
-                sub, logits / args.temperature, axis=-1)
-        else:
-            tokens = jnp.argmax(logits, axis=-1)
-        out.append(np.asarray(tokens))
+    with PreemptionGuard() as guard:
+        for i in range(args.gen - 1):
+            if guard.should_stop:
+                # Clean drain: stop issuing steps, keep what is decoded.
+                drained = True
+                print(f"[serve] preemption requested; draining after "
+                      f"{i} decode steps")
+                break
+            pos = jnp.int32(args.prompt_len + i)
+
+            def step():
+                # The fault hook fires BEFORE decode so a retried step
+                # replays an intact (not-yet-donated) cache.
+                if decode_fault is not None:
+                    decode_fault(i, guard)
+                return decode(params, cache, tokens, pos)
+
+            ts = time.time()
+            logits, cache = retry(
+                step, retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
+                max_delay=_STEP_MAX_DELAY, on_retry=_count_retry)
+            sample_rng, sub = jax.random.split(sample_rng)
+            if args.temperature > 0:
+                tokens = jax.random.categorical(
+                    sub, logits / args.temperature, axis=-1)
+            else:
+                tokens = jnp.argmax(logits, axis=-1)
+            out.append(np.asarray(tokens))
+            msg = straggler.record(time.time() - ts)
+            if msg:
+                print(f"[serve] {msg}")
     jax.block_until_ready(tokens)
     t_decode = time.time() - t0
 
     gen = np.stack(out, axis=1)
-    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    n_steps = gen.shape[1] - 1                 # decode steps completed
+    toks_per_s = args.batch * n_steps / max(t_decode, 1e-9)
     print(f"arch={cfg.name} batch={args.batch} "
           f"prefill {args.prompt_len} tok in {t_prefill*1e3:.0f}ms; "
-          f"decoded {args.gen-1} steps at {toks_per_s:.1f} tok/s total")
+          f"decoded {n_steps} steps at {toks_per_s:.1f} tok/s total")
     print("sample generations (first 2 rows, first 16 tokens):")
     for row in gen[:2]:
         print("  ", row[:16].tolist())
+    return {
+        "tokens": gen,
+        "steps": n_steps,
+        "drained": drained,
+        "retries": retries,
+        "stragglers": list(straggler.flagged),
+        "t_prefill_s": t_prefill,
+        "t_decode_s": t_decode,
+        **topo_info,
+    }
+
+
+def main() -> int:
+    args = build_parser().parse_args()
+    run_serving(args)
     return 0
 
 

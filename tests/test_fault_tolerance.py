@@ -1,0 +1,237 @@
+"""Hardened fault-tolerance primitives (ISSUE 6 satellites).
+
+Covers: ``retry`` full-jitter backoff with a ``max_delay`` cap and per-call
+transient markers (a JAX ``UNAVAILABLE``-style error retries, a
+``ValueError`` re-raises immediately); atomic ``Heartbeat`` writes under a
+concurrent reader; ``PreemptionGuard`` signal-handler restore via
+``uninstall()`` / context manager; and guarded selection hooks — a raising
+observability hook must never abort selection, on cold or warm paths.
+"""
+import os
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.core.selector import (add_selection_hook, clear_selection_cache,
+                                 remove_selection_hook, select_gemm_config)
+from repro.runtime.fault_tolerance import (Heartbeat, PreemptionGuard,
+                                           is_transient, retry)
+
+
+# ---------------------------------------------------------------------------
+# retry: full jitter, max_delay cap, marker extensibility
+# ---------------------------------------------------------------------------
+
+
+def test_retry_unavailable_retries_then_succeeds():
+    calls = []
+
+    def step():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("UNAVAILABLE: device preempted mid-step")
+        return "ok"
+
+    assert retry(step, retries=3, base_delay=0.0) == "ok"
+    assert len(calls) == 3
+
+
+def test_retry_valueerror_reraises_immediately():
+    calls = []
+
+    def step():
+        calls.append(1)
+        raise ValueError("deterministic: bad dims")
+
+    with pytest.raises(ValueError):
+        retry(step, retries=5, base_delay=0.0)
+    assert len(calls) == 1          # no retry on a deterministic error
+
+
+def test_retry_exhaustion_raises_the_transient():
+    def step():
+        raise RuntimeError("transient: never recovers")
+
+    with pytest.raises(RuntimeError, match="never recovers"):
+        retry(step, retries=2, base_delay=0.0)
+
+
+def test_retry_full_jitter_bounds_and_max_delay_cap():
+    """The sleep is drawn uniformly from [0, min(base * 2^attempt,
+    max_delay)] — the seed's unbounded ladder slept minutes by attempt 8."""
+    class RecordingRng:
+        def __init__(self):
+            self.bounds = []
+
+        def uniform(self, lo, hi):
+            self.bounds.append((lo, hi))
+            return 0.0                      # sleep nothing, record bounds
+
+    rng = RecordingRng()
+    n = [0]
+
+    def step():
+        n[0] += 1
+        if n[0] <= 4:
+            raise RuntimeError("transient: flaky")
+        return 1
+
+    assert retry(step, retries=4, base_delay=1.0, max_delay=3.0,
+                 rng=rng) == 1
+    assert [hi for _, hi in rng.bounds] == [1.0, 2.0, 3.0, 3.0]  # capped
+    assert all(lo == 0.0 for lo, _ in rng.bounds)                # full jitter
+
+
+def test_retry_transient_markers_extensible_per_call_site():
+    def flaky_once():
+        calls = []
+
+        def step():
+            calls.append(1)
+            if len(calls) == 1:
+                raise RuntimeError("MY_COLLECTIVE_HICCUP rank 3")
+            return "ok"
+        return step
+
+    # Not a built-in marker: re-raises immediately...
+    with pytest.raises(RuntimeError):
+        retry(flaky_once(), retries=3, base_delay=0.0)
+    # ...but the call site can declare it transient.
+    assert retry(flaky_once(), retries=3, base_delay=0.0,
+                 transient_markers=("MY_COLLECTIVE_HICCUP",)) == "ok"
+    assert is_transient(RuntimeError("MY_COLLECTIVE_HICCUP"),
+                        ("MY_COLLECTIVE_HICCUP",))
+    assert not is_transient(RuntimeError("MY_COLLECTIVE_HICCUP"))
+
+
+def test_retry_on_retry_callback_sees_each_attempt():
+    seen = []
+    n = [0]
+
+    def step():
+        n[0] += 1
+        if n[0] <= 2:
+            raise RuntimeError("transient: x")
+        return 1
+
+    retry(step, retries=3, base_delay=0.0,
+          on_retry=lambda attempt, err: seen.append(attempt))
+    assert seen == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat: atomic writes
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_reader_never_observes_partial_file(tmp_path):
+    """A reader polling the liveness file while beat() hammers it must
+    always see a complete, parseable timestamp — the non-atomic
+    truncate-then-write version fails this within a few hundred reads."""
+    path = str(tmp_path / "alive")
+    hb = Heartbeat(path, interval=3600.0)       # no background cadence
+    hb.beat()
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            hb.beat()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(400):
+            with open(path) as f:
+                txt = f.read()
+            assert txt.strip(), "reader observed an empty heartbeat file"
+            float(txt)                          # and a parseable one
+    finally:
+        stop.set()
+        t.join()
+        hb.close()
+    # os.replace consumed every temp file — no litter next to the target.
+    leftovers = [p for p in os.listdir(tmp_path) if p.endswith(".hb.tmp")]
+    assert leftovers == []
+
+
+def test_heartbeat_value_is_monotonic(tmp_path):
+    path = str(tmp_path / "alive")
+    hb = Heartbeat(path, interval=3600.0)
+    hb.beat()
+    first = float(open(path).read())
+    time.sleep(0.01)
+    hb.beat()
+    second = float(open(path).read())
+    hb.close()
+    assert second >= first
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard: handler restore
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_guard_restores_previous_handlers():
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    with PreemptionGuard() as g:
+        assert signal.getsignal(signal.SIGTERM) == g._handler
+        assert signal.getsignal(signal.SIGINT) == g._handler
+        assert not g.should_stop
+        g.request_stop()
+        assert g.should_stop
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+    assert signal.getsignal(signal.SIGINT) == prev_int
+
+
+def test_preemption_guard_uninstall_is_idempotent():
+    prev_term = signal.getsignal(signal.SIGTERM)
+    g = PreemptionGuard()
+    g.uninstall()
+    g.uninstall()                               # second call: no-op
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+
+
+def test_preemption_guard_flags_real_sigterm():
+    with PreemptionGuard() as g:
+        os.kill(os.getpid(), signal.SIGTERM)
+        deadline = time.time() + 5.0
+        while not g.should_stop and time.time() < deadline:
+            time.sleep(0.01)
+        assert g.should_stop
+    # ...and after exit the (default) handler is back in place; sending
+    # another SIGTERM here would kill the test runner, which is the point.
+
+
+# ---------------------------------------------------------------------------
+# Selection hooks: log-and-continue on a raising observer
+# ---------------------------------------------------------------------------
+
+
+def test_raising_selection_hook_does_not_abort_cold_or_warm():
+    seen = []
+
+    def bad_hook(sel, source):
+        raise RuntimeError("observer crashed")
+
+    def good_hook(sel, source):
+        seen.append(source)
+
+    clear_selection_cache()
+    add_selection_hook(bad_hook)
+    add_selection_hook(good_hook)               # registered after: must run
+    try:
+        with pytest.warns(RuntimeWarning, match="hook skipped"):
+            sel_cold = select_gemm_config(512, 512, 512)
+        assert sel_cold.config.bm >= 1          # selection completed
+        assert seen[-1] == "cold"
+        with pytest.warns(RuntimeWarning, match="hook skipped"):
+            sel_warm = select_gemm_config(512, 512, 512)
+        assert sel_warm is sel_cold             # memo hit, still delivered
+        assert seen[-1] == "memo"
+    finally:
+        remove_selection_hook(bad_hook)
+        remove_selection_hook(good_hook)
+        clear_selection_cache()
