@@ -24,7 +24,8 @@ def main() -> None:
     from benchmarks import (fused_epilogue, hierarchy_sweep, llama3_shapes,
                             model_fidelity, peak_vs_intensity,
                             roofline_table, selection_efficiency,
-                            selection_overhead, wave_quantization)
+                            selection_overhead, serving_throughput,
+                            wave_quantization)
     from repro.core import clear_selection_cache, select_gemm_config
 
     n_eff = 1000 if args.full else (8 if args.smoke else 120)
@@ -60,6 +61,25 @@ def main() -> None:
     speedups = [row[7] for row in tab]
     print(f"selector_scoring_speedup,{tab[2][6]:.1f},"
           f"min={min(speedups):.1f}x_max={max(speedups):.1f}x")
+
+    # §Batched selection — one vectorized cold pass for N shapes vs N
+    # scalar calls (llama3 30-shape sweep, in-memory + disk-recording).
+    bs = selection_overhead.measure_batch_selection(
+        repeats=3 if args.smoke else 7, verbose=False)
+    print(f"batch_selection,{bs['mem_batch_s']*1e6:.1f},"
+          f"mem={bs['mem_speedup']:.1f}x_disk={bs['disk_speedup']:.1f}x_"
+          f"n={bs['n_shapes']}")
+
+    # §Serving — continuous batching over ragged requests: model-priced
+    # buckets vs the pow2 baseline (same requests, same tokens).
+    t0 = time.perf_counter()
+    st = serving_throughput.run(smoke=not args.full, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6
+    mp, p2 = st["model_priced"], st["pow2"]
+    print(f"serving_throughput,{dt:.1f},"
+          f"modeled={p2['modeled_total_s']/mp['modeled_total_s']:.2f}x_"
+          f"toks={mp['tokens_per_s']/p2['tokens_per_s']:.2f}x_"
+          f"pad={mp['pad_fraction']*100:.0f}%_vs_{p2['pad_fraction']*100:.0f}%")
 
     # §Fused epilogue — fused vs unfused bytes/latency (roofline accounting).
     t0 = time.perf_counter()

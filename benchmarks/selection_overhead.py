@@ -10,8 +10,10 @@ selection wall time.
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
@@ -21,7 +23,8 @@ from benchmarks.common import write_csv
 from repro.core import (GemmProblem, candidate_tiles, clear_selection_cache,
                         score_candidate, select_gemm_config)
 from repro.core.hardware import TPU_V5E
-from repro.core.selector import select_fast
+from repro.core.selector import (load_selection_cache, select_fast,
+                                 select_gemm_config_batch)
 from repro.kernels import matmul
 
 
@@ -84,6 +87,106 @@ def measure_scoring(M: int, N: int, K: int, repeats: int = 9) -> tuple:
     assert best_vec == best_loop, (best_vec, best_loop)
     return t_loop, t_vec, t_loop / t_vec, len(
         candidate_tiles(p, TPU_V5E))
+
+
+def _llama3_sweep_shapes() -> List[tuple]:
+    """The 30 projection GEMMs of Llama-3 8B + 70B at the default token
+    counts — the realistic many-shape cold sweep a serving warm-up runs."""
+    from repro.configs.llama3_shapes import llama3_gemms
+    return [(m, n, k) for size in ("8b", "70b")
+            for (_, m, n, k) in llama3_gemms(size)]
+
+
+def measure_batch_selection(repeats: int = 5, verbose: bool = True) -> Dict:
+    """Batched cold selection (``select_gemm_config_batch``) vs N scalar
+    ``select_gemm_config`` calls over the 30-shape Llama-3 sweep.
+
+    Reports best-of-``repeats`` wall times (the file's convention, see
+    ``measure_scoring``) for BOTH serving-relevant modes: pure in-memory
+    (no persistence) and disk-recording
+    (``REPRO_SELECTION_CACHE`` set — the scalar path pays per-shape
+    merge-on-write flushes, the batch path one bulk merge).  Every repeat
+    asserts the batch selections are bit-identical to the scalar ones
+    (config, candidate count, and the predicted total down to the float
+    bit pattern)."""
+    shapes = _llama3_sweep_shapes()
+    hw = TPU_V5E
+
+    def scalar_run():
+        return [select_gemm_config(m, n, k, hw=hw) for m, n, k in shapes]
+
+    def batch_run():
+        return select_gemm_config_batch(shapes, hw=hw)
+
+    def check(ref, got):
+        for a, b in zip(ref, got):
+            assert a.config == b.config, (a.config, b.config)
+            assert a.n_candidates == b.n_candidates
+            assert a.predicted.total.hex() == b.predicted.total.hex()
+
+    out: Dict = {"n_shapes": len(shapes)}
+    # -- in-memory mode ----------------------------------------------------
+    scalar_run()                                    # one warm-up of each
+    clear_selection_cache()
+    batch_run()
+    ts, tb = [], []
+    for _ in range(repeats):
+        clear_selection_cache()
+        t0 = time.perf_counter()
+        ref = scalar_run()
+        ts.append(time.perf_counter() - t0)
+        clear_selection_cache()
+        t0 = time.perf_counter()
+        got = batch_run()
+        tb.append(time.perf_counter() - t0)
+        check(ref, got)
+    out["mem_scalar_s"] = min(ts)
+    out["mem_batch_s"] = min(tb)
+    out["mem_speedup"] = out["mem_scalar_s"] / out["mem_batch_s"]
+
+    # -- disk-recording mode (the persistent-server cold path) -------------
+    prev = os.environ.get("REPRO_SELECTION_CACHE")
+    ts, tb = [], []
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "selections.json")
+        os.environ["REPRO_SELECTION_CACHE"] = path
+        try:
+            for _ in range(repeats):
+                for fn, acc in ((scalar_run, ts), (batch_run, tb)):
+                    if os.path.exists(path):
+                        os.unlink(path)
+                    clear_selection_cache()
+                    load_selection_cache(path)      # fresh empty table
+                    t0 = time.perf_counter()
+                    fn()
+                    acc.append(time.perf_counter() - t0)
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_SELECTION_CACHE", None)
+            else:
+                os.environ["REPRO_SELECTION_CACHE"] = prev
+            load_selection_cache()                  # restore prior state
+            clear_selection_cache()
+    out["disk_scalar_s"] = min(ts)
+    out["disk_batch_s"] = min(tb)
+    out["disk_speedup"] = out["disk_scalar_s"] / out["disk_batch_s"]
+
+    write_csv("batch_selection.csv",
+              ["mode", "scalar_ms", "batch_ms", "speedup", "n_shapes"],
+              [["memory", out["mem_scalar_s"] * 1e3,
+                out["mem_batch_s"] * 1e3, out["mem_speedup"], len(shapes)],
+               ["disk", out["disk_scalar_s"] * 1e3,
+                out["disk_batch_s"] * 1e3, out["disk_speedup"],
+                len(shapes)]])
+    if verbose:
+        print(f"[batch] {len(shapes)}-shape llama3 cold sweep: "
+              f"in-memory {out['mem_scalar_s']*1e3:.2f}ms -> "
+              f"{out['mem_batch_s']*1e3:.2f}ms "
+              f"({out['mem_speedup']:.1f}x); "
+              f"disk-recording {out['disk_scalar_s']*1e3:.2f}ms -> "
+              f"{out['disk_batch_s']*1e3:.2f}ms "
+              f"({out['disk_speedup']:.1f}x)")
+    return out
 
 
 def run(sizes=(256, 512, 1024, 2048, 4096, 8192, 16384),

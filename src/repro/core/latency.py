@@ -146,6 +146,42 @@ class GemmProblem:
         return self.flops / self.min_bytes
 
 
+@dataclass(frozen=True, eq=False)
+class ShapeBatch:
+    """Column view of S GEMM problems sharing dtypes/epilogue — the batched
+    problem axis ``selector.select_fast_batch`` broadcasts over.
+
+    ``M``/``N``/``K``/``batch`` are (S, 1) int64 columns; broadcast against
+    the (P,) candidate menu columns they yield (S, P) scored arrays whose
+    rows are elementwise-identical to S scalar scoring passes (every int
+    product stays < 2**53, so the int64 -> float64 casts inside the model
+    are exact and the IEEE op order is unchanged).  Duck-types the
+    ``GemmProblem`` fields the vectorized model functions read."""
+
+    M: np.ndarray
+    N: np.ndarray
+    K: np.ndarray
+    batch: np.ndarray
+    in_dtype: str = "bfloat16"
+    out_dtype: str = "float32"
+    epilogue: Epilogue = EPILOGUE_NONE
+
+    @classmethod
+    def from_problems(cls, problems: Sequence["GemmProblem"]) -> "ShapeBatch":
+        p0 = problems[0]
+        for p in problems:
+            if (p.in_dtype, p.out_dtype, p.epilogue) != \
+                    (p0.in_dtype, p0.out_dtype, p0.epilogue):
+                raise ValueError(
+                    "ShapeBatch requires uniform dtypes/epilogue; got "
+                    f"{p} vs {p0}")
+        cols = np.asarray([(p.M, p.N, p.K, p.batch) for p in problems],
+                          np.int64).reshape(len(problems), 4, 1)
+        return cls(M=cols[:, 0], N=cols[:, 1], K=cols[:, 2],
+                   batch=cols[:, 3], in_dtype=p0.in_dtype,
+                   out_dtype=p0.out_dtype, epilogue=p0.epilogue)
+
+
 @dataclass(frozen=True)
 class TileConfig:
     """One point of the candidate space (the paper's tiling hierarchy knobs).
@@ -255,7 +291,8 @@ def grid_shape(p: GemmProblem, t: TileConfig) -> Tuple[int, int, int]:
 # chain the factor is exactly 1.0, reproducing the PR 2 model bit-for-bit.
 # ---------------------------------------------------------------------------
 
-def wave_model(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+def wave_model(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+               grid: Optional[Tuple[int, int, int]] = None
                ) -> Tuple[int, int, float]:
     """Returns (units, waves, quantization factor == waves * cores / units).
 
@@ -266,7 +303,7 @@ def wave_model(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     Single-core chains: units == waves, factor == 1.0 exactly.
     """
     C = hw.total_cores()
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     if t.schedule == "stream_k" and C > 1:
         units = Tm * Tn * Tk * p.batch
     else:
@@ -279,7 +316,8 @@ def wave_model(p: GemmProblem, t: TileConfig, hw: HardwareSpec
 # Alg. 3 — compute latency of one VMEM block (per grid step).
 # ---------------------------------------------------------------------------
 
-def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+                         grid: Optional[Tuple[int, int, int]] = None
                          ) -> Tuple[float, float]:
     """Returns (mxu_seconds, vmem_seconds) for one grid step.
 
@@ -300,7 +338,7 @@ def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     in_bytes = (t.bm * t.bk + t.bk * t.bn) * bi
     acc_bytes = 2 * t.bm * t.bn * ACC_BYTES  # f32 accumulator read + write
     ep = p.epilogue
-    _, _, Tk = grid_shape(p, t)
+    _, _, Tk = grid or grid_shape(p, t)
     e_bytes = (ep.n_mn_operands * t.bm * t.bn
                + (t.bn if ep.bias else 0)) * bi / Tk
     vmem = (in_bytes + acc_bytes + e_bytes) / hw.vmem_bandwidth
@@ -311,7 +349,9 @@ def step_compute_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
 # Alg. 5 adaptation — deterministic revisit/locality model.
 # ---------------------------------------------------------------------------
 
-def revisit_fractions(p: GemmProblem, t: TileConfig) -> Tuple[float, float]:
+def revisit_fractions(p: GemmProblem, t: TileConfig,
+                      grid: Optional[Tuple[int, int, int]] = None
+                      ) -> Tuple[float, float]:
     """Fraction of grid steps at which the (A, B) block fetch is *skipped*.
 
     Iteration order is (m outer, n middle, k inner) with group_m swizzling.
@@ -324,7 +364,7 @@ def revisit_fractions(p: GemmProblem, t: TileConfig) -> Tuple[float, float]:
       possible when Tk == 1 and we advance m within a group (group_m > 1
       walks m innermost within a group of rows).
     """
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     if Tk != 1:
         return 0.0, 0.0
     if t.group_m <= 1:
@@ -337,8 +377,8 @@ def revisit_fractions(p: GemmProblem, t: TileConfig) -> Tuple[float, float]:
     return 0.0, b_skip
 
 
-def hbm_traffic(p: GemmProblem, t: TileConfig, *, revisit: bool = True
-                ) -> float:
+def hbm_traffic(p: GemmProblem, t: TileConfig, *, revisit: bool = True,
+                grid: Optional[Tuple[int, int, int]] = None) -> float:
     """Exact fetched+written bytes for the whole GEMM (the all-HBM base).
 
     Without revisits: A is fetched Tn times over, B Tm times over
@@ -355,9 +395,10 @@ def hbm_traffic(p: GemmProblem, t: TileConfig, *, revisit: bool = True
     Epilogue operands (bias / gate / residual) are read once per output
     tile; fused, the output is still written exactly once.
     """
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     bi, bo = DTYPE_BYTES[p.in_dtype], DTYPE_BYTES[p.out_dtype]
-    a_skip, b_skip = revisit_fractions(p, t) if revisit else (0.0, 0.0)
+    a_skip, b_skip = (revisit_fractions(p, t, (Tm, Tn, Tk)) if revisit
+                      else (0.0, 0.0))
     # Padded fetch sizes: DMA moves whole blocks (edge blocks move real bytes;
     # we model the exact edge in the simulator, the mean here).
     a_bytes = Tn * (p.M * p.K) * bi * (1.0 - a_skip)
@@ -385,7 +426,8 @@ def hbm_traffic(p: GemmProblem, t: TileConfig, *, revisit: bool = True
 # that a chain with no cache levels reproduces the seed model bit-for-bit.
 # ---------------------------------------------------------------------------
 
-def _spill_classes(p: GemmProblem, t: TileConfig, revisit: bool = True
+def _spill_classes(p: GemmProblem, t: TileConfig, revisit: bool = True,
+                   grid: Optional[Tuple[int, int, int]] = None
                    ) -> List[Tuple[float, float]]:
     """Re-read classes not absorbed by the revisit skip, per batch element.
 
@@ -406,7 +448,7 @@ def _spill_classes(p: GemmProblem, t: TileConfig, revisit: bool = True
     classes join the recurrence with their one-tile windows (they become
     near-certain cache hits instead of free revisits).
     """
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     bi = DTYPE_BYTES[p.in_dtype]
     g = min(t.group_m, Tm)
     tile_window = (t.bm + t.bn) * p.K * bi
@@ -454,7 +496,8 @@ def _serving_cache(window: float, hw: HardwareSpec
     return None
 
 
-def schedule_extra_classes(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+def schedule_extra_classes(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+                           grid: Optional[Tuple[int, int, int]] = None
                            ) -> List[Tuple[float, float]]:
     """Partial-accumulator traffic the schedule adds on multi-core chains,
     as ``(bytes, window)`` pairs for the cache recurrence (whole GEMM,
@@ -474,7 +517,7 @@ def schedule_extra_classes(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     C = hw.total_cores()
     if C == 1:
         return []
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     block_acc = t.bm * t.bn * ACC_BYTES
     if t.schedule == "stream_k":
         steps = Tm * Tn * Tk * p.batch
@@ -492,7 +535,8 @@ def schedule_extra_classes(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     return []
 
 
-def level_traffic(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+def level_traffic(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+                  grid: Optional[Tuple[int, int, int]] = None
                   ) -> Dict[str, float]:
     """Bytes served from each memory level (backing + caches), whole GEMM:
     the all-HBM base (revisit model on single-core chains) re-routed by the
@@ -504,17 +548,17 @@ def level_traffic(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     """
     revisit = hw.total_cores() == 1
     served = {lvl.name: 0.0 for lvl in hw.levels[:-1]}
-    base = hbm_traffic(p, t, revisit=revisit)
+    base = hbm_traffic(p, t, revisit=revisit, grid=grid)
     served[hw.backing.name] = base
     if hw.cache_levels:
-        for bytes_, window in _spill_classes(p, t, revisit):
+        for bytes_, window in _spill_classes(p, t, revisit, grid):
             lvl = _serving_cache(window, hw)
             if lvl is not None:
                 b = bytes_ * p.batch
                 served[lvl.name] += b
                 served[hw.backing.name] -= b
         served[hw.backing.name] = max(served[hw.backing.name], 0.0)
-    for bytes_, window in schedule_extra_classes(p, t, hw):
+    for bytes_, window in schedule_extra_classes(p, t, hw, grid):
         lvl = _serving_cache(window, hw) if hw.cache_levels else None
         served[lvl.name if lvl is not None else hw.backing.name] += bytes_
     return served
@@ -572,7 +616,8 @@ def reuse_fraction(p: GemmProblem, t: TileConfig,
 # Alg. 7 — memory latency of a loop iteration (per grid step, averaged).
 # ---------------------------------------------------------------------------
 
-def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
+def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+                        grid: Optional[Tuple[int, int, int]] = None
                         ) -> Tuple[Dict[str, float], float, Dict[str, float]]:
     """Returns (per-level step seconds, issue_seconds, per-level served
     bytes) averaged over grid steps.
@@ -582,9 +627,9 @@ def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     issue-rate axis.  Memory levels pipeline against each other, so the
     effective memory-side step time is the max of the per-level entries.
     """
-    Tm, Tn, Tk = grid_shape(p, t)
+    Tm, Tn, Tk = grid or grid_shape(p, t)
     steps = Tm * Tn * Tk * p.batch
-    served = level_traffic(p, t, hw)
+    served = level_traffic(p, t, hw, (Tm, Tn, Tk))
     return level_step_seconds(hw, served, steps), hw.dma_fixed, served
 
 
@@ -594,18 +639,18 @@ def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
 
 def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
                  ) -> LatencyBreakdown:
-    Tm, Tn, Tk = grid_shape(p, t)
+    grid = Tm, Tn, Tk = grid_shape(p, t)
     steps = Tm * Tn * Tk * p.batch
 
-    mxu_s, vmem_s = step_compute_latency(p, t, hw)
-    level_s, issue_s, served = step_memory_latency(p, t, hw)
+    mxu_s, vmem_s = step_compute_latency(p, t, hw, grid)
+    level_s, issue_s, served = step_memory_latency(p, t, hw, grid)
     hbm_s = level_s[hw.backing.name]
     mem_s = max(level_s.values())
 
     # Alg. 4 occupancy stage: per-core terms (MXU, staging port, DMA issue)
     # pay the tail-wave quantization factor; chip-shared memory ports do
     # not.  occ == 1.0 exactly on single-core chains (PR 2 parity).
-    units, waves, occ = wave_model(p, t, hw)
+    units, waves, occ = wave_model(p, t, hw, grid)
     compute_side = max(mxu_s, vmem_s) * occ
     memory_side = mem_s + issue_s * occ
     l_iter = max(compute_side, memory_side)           # software pipeline
@@ -655,6 +700,222 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
         waves=waves,
         occupancy=units / (waves * hw.total_cores()),
     )
+
+
+def gemm_latency_batch(problems: Sequence[GemmProblem],
+                       tiles: Sequence[TileConfig], hw: HardwareSpec
+                       ) -> List[LatencyBreakdown]:
+    """``gemm_latency`` for S (problem, tile) pairs in one numpy pass —
+    the repricing leg of ``selector.select_gemm_config_batch`` (each cold
+    winner needs its full breakdown for the :class:`Selection` record).
+
+    Problems must share dtypes and epilogue (the ``ShapeBatch`` contract).
+    Every field of every returned breakdown is BIT-IDENTICAL to the scalar
+    call: the (S,) int64/float64 columns run the exact elementwise IEEE op
+    sequence of ``gemm_latency`` and its helpers — data-dependent branches
+    become ``np.where`` selections whose taken values match the scalar
+    branch, absent traffic classes contribute exact 0.0 terms, and the
+    per-level serve/subtract order of ``level_traffic`` is preserved class
+    by class.  ``tests/test_batch_selection.py`` pins hex-exact parity."""
+    S = len(problems)
+    if S == 0:
+        return []
+    p0 = problems[0]
+    for p in problems:
+        if (p.in_dtype, p.out_dtype, p.epilogue) != \
+                (p0.in_dtype, p0.out_dtype, p0.epilogue):
+            raise ValueError(
+                f"gemm_latency_batch requires uniform dtypes/epilogue; "
+                f"got {p} vs {p0}")
+    cols = np.asarray(
+        [(p.M, p.N, p.K, p.batch, t.bm, t.bn, t.bk, t.split_k, t.group_m,
+          t.schedule == "stream_k") for p, t in zip(problems, tiles)],
+        np.int64).T
+    M, N, K, B, bm, bn, bk, sk, gm_ = cols[:9]
+    stream = cols[9].astype(bool)
+    bi, bo = DTYPE_BYTES[p0.in_dtype], DTYPE_BYTES[p0.out_dtype]
+    ep = p0.epilogue
+    C = hw.total_cores()
+
+    Tm = -(-M // bm)
+    Tn = -(-N // bn)
+    kps = -(-K // sk)
+    Tk = -(-kps // bk) * sk
+    steps = Tm * Tn * Tk * B
+
+    # step_compute_latency
+    mm, mn, mk = hw.mxu_shape
+    n_atoms = (-(-bm // mm)) * (-(-bn // mn)) * (-(-bk // mk))
+    mxu_s = n_atoms * (2.0 * mm * mn * mk) / hw.flops(p0.in_dtype)
+    in_bytes = (bm * bk + bk * bn) * bi
+    acc_b = 2 * bm * bn * ACC_BYTES
+    e_vmem = (ep.n_mn_operands * bm * bn
+              + (bn if ep.bias else 0)) * bi / Tk
+    vmem_s = (in_bytes + acc_b + e_vmem) / hw.vmem_bandwidth
+
+    # hbm_traffic base (revisit_fractions inert on multi-core chains)
+    revisit = C == 1
+    if revisit:
+        tk1 = Tk == 1
+        gmin = np.minimum(gm_, Tm)
+        a_skip = np.where(tk1 & (gm_ <= 1), (Tn - 1) / Tn, 0.0)
+        b_skip = np.where(tk1 & (gm_ > 1), (gmin - 1) / gmin, 0.0)
+    else:
+        a_skip = b_skip = 0.0
+    a_b = Tn * (M * K) * bi * (1.0 - a_skip)
+    b_b = Tm * (K * N) * bi * (1.0 - b_skip)
+    c_b = M * N * bo
+    e_b = (ep.n_mn_operands * M * N + (N if ep.bias else 0)) * bi
+    base = B * (a_b + b_b + c_b + e_b)
+
+    # schedule extras (empty on single-core chains), as zero-padded classes
+    extra: List[Tuple[np.ndarray, np.ndarray]] = []
+    if C > 1:
+        block_acc = (bm * bn * ACC_BYTES).astype(np.float64)
+        if stream.any():
+            q = -(-steps // C)
+            nb = -(-steps // q) - 1
+            aligned = nb // (Tk // np.gcd(q, Tk))
+            n_split = np.where(stream, nb - aligned, 0)
+            extra.append((2.0 * n_split * block_acc, block_acc))
+        comb = (~stream) & (sk > 1)
+        if comb.any():
+            tiles_n = Tm * Tn * B
+            extra.append((np.where(comb, 2.0 * sk * tiles_n * block_acc,
+                                   0.0), sk * block_acc))
+
+    # level_traffic: serve spill classes nearest-cache-first, subtracting
+    # each served class from backing in class order (scalar op order).
+    served: Dict[str, np.ndarray] = {
+        lvl.name: np.zeros(S, np.float64) for lvl in hw.levels[:-1]}
+    backing = hw.backing.name
+    served[backing] = base + np.zeros(S, np.float64)
+    caches = hw.cache_levels
+    if caches:
+        gsp = np.minimum(np.maximum(gm_, 1), Tm)     # _spill_classes' g
+        gle1 = gsp <= 1
+        ggt1 = ~gle1
+        tk1s = (Tk == 1) if revisit else np.zeros(S, bool)
+        MKbi = np.asarray(M * K * bi, np.float64)
+        KNbi = np.asarray(K * N * bi, np.float64)
+        Kbi = np.asarray(K * bi, np.float64)
+        KN = np.asarray(K * N, np.float64)
+        sp_a = np.where(gle1 & tk1s, 0.0, (Tn - 1) * MKbi)
+        sp_a_win = np.where(ggt1, (gsp * bm + bn) * Kbi, (bm + bn) * Kbi)
+        sp_b1 = np.where(gle1, (Tm - 1) * KNbi,
+                         np.where(tk1s, 0.0,
+                                  (gsp - 1) / gsp * Tm * K * N * bi))
+        sp_b1_win = np.where(gle1, (bm * K + K * N) * float(bi),
+                             (bm + bn) * Kbi)
+        sp_b2 = np.where(ggt1,
+                         np.maximum(Tm / gsp - 1.0, 0.0) * K * N * bi, 0.0)
+        sp_b2_win = (gsp * bm * K + KN) * bi
+        scales = [_window_scale(hw, lvl) for lvl in caches]
+        for bytes_, win in ((sp_a * B, sp_a_win), (sp_b1 * B, sp_b1_win),
+                            (sp_b2 * B, sp_b2_win)):
+            assigned = np.zeros(S, bool)
+            for li in range(len(caches) - 1, -1, -1):  # nearest cache first
+                fit = ~assigned & (win * scales[li] <= caches[li].budget())
+                served[caches[li].name] = served[caches[li].name] \
+                    + np.where(fit, bytes_, 0.0)
+                assigned |= fit
+            served[backing] = served[backing] \
+                - np.where(assigned, bytes_, 0.0)
+        served[backing] = np.maximum(served[backing], 0.0)
+        for bytes_, win in extra:
+            assigned = np.zeros(S, bool)
+            for li in range(len(caches) - 1, -1, -1):
+                fit = ~assigned & (win * scales[li] <= caches[li].budget())
+                served[caches[li].name] = served[caches[li].name] \
+                    + np.where(fit, bytes_, 0.0)
+                assigned |= fit
+            served[backing] = served[backing] \
+                + np.where(assigned, 0.0, bytes_)
+    else:
+        for bytes_, _ in extra:
+            served[backing] = served[backing] + bytes_
+
+    # level_step_seconds (inclusive hierarchy) + mem_s = max over ports
+    level_s: Dict[str, np.ndarray] = {}
+    through = np.zeros(S, np.float64)
+    for lvl in hw.levels[:-1]:
+        through = through + served[lvl.name]
+        level_s[lvl.name] = through / lvl.bandwidth / steps
+    hbm_s = level_s[backing]
+    mem_s: Optional[np.ndarray] = None
+    for v in level_s.values():
+        mem_s = v if mem_s is None else np.maximum(mem_s, v)
+
+    # wave_model + pipeline (Alg. 8/9).  On single-core chains occ == 1.0
+    # exactly (units == waves), so every ``* occ`` is the float identity
+    # x * 1.0 == x and can be elided bit-exactly.
+    issue_s = hw.dma_fixed
+    if C > 1:
+        units = np.where(stream, Tm * Tn * Tk * B, Tm * Tn * B * sk)
+        waves = -(-units // C)
+        occ = waves * C / units
+        compute_side = np.maximum(mxu_s, vmem_s) * occ
+        memory_side = mem_s + issue_s * occ
+    else:
+        units = Tm * Tn * B * sk
+        waves = units
+        occ = 1.0
+        compute_side = np.maximum(mxu_s, vmem_s)
+        memory_side = mem_s + issue_s
+    l_iter = np.maximum(compute_side, memory_side)
+    prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
+    epilog = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
+    fill_drain = hw.kernel_launch + prologue + epilog
+    total = fill_drain + steps * l_iter
+    padded_flops = (2.0 * B
+                    * (-(-M // bm) * bm) * (-(-N // bn) * bn)
+                    * (-(-(-(-K // sk)) // bk) * bk) * sk)
+
+    # Per-row assembly: extract columns once; the bottleneck argmax is
+    # vectorized (np.argmax first-max tie-break == dict-insertion-order max
+    # of the scalar ``terms`` dict, built in the identical key order).
+    cache_names = [lvl.name for lvl in caches]
+    lvl_names = [lvl.name for lvl in hw.levels[:-1]]
+    served_l = {n: served[n].tolist() for n in lvl_names}
+    level_sec = {n: steps * level_s[n] for n in lvl_names}
+    level_sec_l = {n: level_sec[n].tolist() for n in lvl_names}
+    t_mxu_a = steps * mxu_s * occ if C > 1 else steps * mxu_s
+    t_vmem_a = steps * vmem_s * occ if C > 1 else steps * vmem_s
+    t_issue_a = steps * issue_s * occ if C > 1 else steps * issue_s
+    term_names = ["mxu_compute", "vmem_bandwidth", "hbm_bandwidth",
+                  "dma_issue", "pipeline_fill"] \
+        + [f"{n}_bandwidth" for n in cache_names]
+    term_cols = [t_mxu_a, t_vmem_a, level_sec[backing], t_issue_a,
+                 fill_drain] + [level_sec[n] for n in cache_names]
+    bot_idx = np.argmax(np.stack(term_cols), axis=0).tolist()
+    t_mxu = t_mxu_a.tolist()
+    t_vmem = t_vmem_a.tolist()
+    t_hbm = level_sec_l[backing]
+    t_issue = t_issue_a.tolist()
+    fd_l = fill_drain.tolist()
+    tot_l = total.tolist()
+    pf_l = padded_flops.tolist()
+    units_l, waves_l = units.tolist(), waves.tolist()
+    occup_l = ((units / (waves * C)).tolist() if C > 1 else [1.0] * S)
+    out: List[LatencyBreakdown] = []
+    for i in range(S):
+        out.append(LatencyBreakdown(
+            total=tot_l[i],
+            compute=t_mxu[i],
+            vmem=t_vmem[i],
+            hbm=t_hbm[i],
+            issue=t_issue[i],
+            fill_drain=fd_l[i],
+            hbm_traffic=served_l[backing][i],
+            padded_flops=pf_l[i],
+            bottleneck=term_names[bot_idx[i]],
+            level_bytes={n: served_l[n][i] for n in lvl_names},
+            level_seconds={n: level_sec_l[n][i] for n in lvl_names},
+            units=units_l[i],
+            waves=waves_l[i],
+            occupancy=occup_l[i],
+        ))
+    return out
 
 
 def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
@@ -783,7 +1044,12 @@ def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
     inert on multi-core chains).  ``sk``/``sched`` feed the combine/fixup
     classes; omitted they default to sk=1 data_parallel.  Chains with no
     cache level return the seed's exact expression — bit-for-bit parity on
-    1-level topologies."""
+    1-level topologies.
+
+    ``p`` may be a scalar :class:`GemmProblem` or a :class:`ShapeBatch`
+    of (S, 1) columns — with (S, P)-broadcast ``Tm``/``Tn``/... the same
+    expressions score S problems in one pass, rows bit-identical to S
+    scalar calls (``selector.select_fast_batch``)."""
     if sk is None:
         sk = np.ones_like(Tm)
     if sched is None:
@@ -796,6 +1062,14 @@ def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
     revisit = hw.total_cores() == 1
     bi = DTYPE_BYTES[p.in_dtype]
     M, N, K = p.M, p.N, p.K
+    # Shape dims may be python ints (GemmProblem) or (S, 1) int64 columns
+    # (ShapeBatch).  np.asarray(..., float64) covers both and is exact for
+    # either (every product < 2**53), preserving the scalar path's IEEE op
+    # order bit-for-bit.
+    MKbi = np.asarray(M * K * bi, np.float64)
+    KNbi = np.asarray(K * N * bi, np.float64)
+    Kbi = np.asarray(K * bi, np.float64)
+    KN = np.asarray(K * N, np.float64)
     g = np.minimum(np.maximum(gm, 1), Tm).astype(np.float64)
     gle1 = g <= 1          # clamped, matching _spill_classes' g = min(gm, Tm)
     ggt1 = ~gle1
@@ -803,18 +1077,18 @@ def memory_step_seconds_arrays(p: GemmProblem, hw: HardwareSpec,
     tk1 = (Tk == 1) if revisit else np.zeros(np.shape(Tk), bool)
     # Re-read classes: bytes (per batch element) + reuse-window footprints,
     # mirroring _spill_classes.  Revisit-skipped classes zero out.
-    a_bytes = np.where(gle1 & tk1, 0.0, (Tn - 1) * float(M * K * bi))
-    a_win = np.where(ggt1, (g * bm + bn) * float(K * bi),
-                     (bm + bn) * float(K * bi))
+    a_bytes = np.where(gle1 & tk1, 0.0, (Tn - 1) * MKbi)
+    a_win = np.where(ggt1, (g * bm + bn) * Kbi,
+                     (bm + bn) * Kbi)
     b1_bytes = np.where(
-        gle1, (Tm - 1) * float(K * N * bi),
-        np.where(tk1, 0.0, (g - 1) / g * Tm * float(K * N * bi)))
+        gle1, (Tm - 1) * KNbi,
+        np.where(tk1, 0.0, (g - 1) / g * Tm * KNbi))
     b1_win = np.where(gle1, (bm * K + K * N) * float(bi),
-                      (bm + bn) * float(K * bi))
+                      (bm + bn) * Kbi)
     b2_bytes = np.where(ggt1,
-                        np.maximum(Tm / g - 1.0, 0.0) * float(K * N * bi),
+                        np.maximum(Tm / g - 1.0, 0.0) * KNbi,
                         0.0)
-    b2_win = (g * bm * K + float(K * N)) * bi
+    b2_win = (g * bm * K + KN) * bi
     caches = hw.cache_levels
     scales = [_window_scale(hw, lvl) for lvl in caches]
     absorbed: List = [0.0] * len(caches)

@@ -34,10 +34,12 @@ from repro.core.latency import (
     Epilogue,
     GemmProblem,
     LatencyBreakdown,
+    ShapeBatch,
     TileConfig,
     cdiv,
     fits_placement,
     gemm_latency,
+    gemm_latency_batch,
     grid_shape,
     memory_step_seconds_arrays,
     occupancy_arrays,
@@ -363,6 +365,254 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
                       schedule=SCHEDULES[int(sched[i])]), n_cands
 
 
+_ALIGNED_MENUS: Dict[Tuple[Tuple[int, ...], int], Optional[np.ndarray]] = {}
+_PRUNED_COLS: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
+
+
+def _cut_col(menu: Sequence[int], ext: np.ndarray, align: int) -> np.ndarray:
+    """Vectorized ``_menu_cut`` over an (S, 1) extent column: binary-search
+    the (cached) aligned ascending menu for the smallest entry >= the padded
+    extent, clamping to the largest.  Falls back to the scalar scan when the
+    aligned menu is not strictly ascending (the scan is order-sensitive)."""
+    mkey = (tuple(menu), align)
+    arr = _ALIGNED_MENUS.get(mkey, False)
+    if arr is False:
+        a = np.asarray([m for m in menu if m % align == 0], np.int64)
+        arr = a if a.size > 1 and bool((a[1:] > a[:-1]).all()) else None
+        _ALIGNED_MENUS[mkey] = arr
+    if arr is not None:
+        padded = (-(-ext // align)) * align
+        i = np.minimum(np.searchsorted(arr, padded[:, 0]), arr.size - 1)
+        return arr[i][:, None]
+    return np.asarray([_menu_cut(menu, int(e), align)
+                       for e in ext[:, 0]], np.int64)[:, None]
+
+
+def select_fast_batch(problems: Sequence[GemmProblem], hw: HardwareSpec, *,
+                      allow_split_k: bool = True,
+                      allow_grouping: bool = True,
+                      ) -> List[Tuple[TileConfig, int]]:
+    """``select_fast`` for S problems in ONE numpy pass: the shapes stack as
+    an (S, 1) column axis against the cached (P,) menu grid, so every model
+    expression broadcasts to (S, P) and the whole sweep costs one scoring
+    pass instead of S.  Problems must share dtypes and epilogue (the grid
+    and the static score terms are per-(hw, dtypes)).
+
+    Per-row results are BIT-IDENTICAL to S scalar ``select_fast`` calls:
+    the int64 -> float64 casts are exact (products < 2**53) and every
+    elementwise op runs in the same IEEE order as the scalar path —
+    ``tests/test_batch_selection.py`` pins config + hex-exact latency
+    parity.  Same argmin/volume tie-break, applied per row."""
+    if not problems:
+        return []
+    pb = ShapeBatch.from_problems(problems)
+    (bm, bn, bk, sk, gm, sched, static_keep,
+     (bm_sh, bn_sh, bk_sh, sk_sh), (sk_gt1, gm_gt1, gm_le1)) = \
+        _menu_grid(hw, pb.in_dtype)
+    mxu_s, vmem_base_s, bmn, fill_drain, vols = _static_score_terms(
+        hw, pb.in_dtype, pb.out_dtype)
+    M, N, K, batch = pb.M, pb.N, pb.K, pb.batch      # (S, 1) int64 columns
+
+    # _keep_mask, broadcast: per-row menu cuts + the split-K/grouping gates.
+    sub = hw.sublane(pb.in_dtype)
+    lane = hw.lane_width
+    n_cores = hw.total_cores()
+    sk_gate = 16 if n_cores == 1 else max(16, 2 * n_cores)
+    cut_m, cut_n, cut_k = (_cut_col(hw.bm_menu, M, sub),
+                           _cut_col(hw.bn_menu, N, lane),
+                           _cut_col(hw.bk_menu, K, lane))
+    # Column prune: a candidate failing the static mask or the UNION of the
+    # per-row cuts (or a disabled sk/gm axis) has keep == False for every
+    # row — drop it before broadcasting so the (S, P') temporaries stay
+    # small.  Order-preserving compression: per-row counts, scores and the
+    # first-max tie-break are untouched.  Cached per cut-maxima triple (a
+    # handful of values — cuts are menu entries), so steady-state batches
+    # skip the 15 gather passes.
+    ckey = (_grid_identity(hw), pb.in_dtype, pb.out_dtype, hw.mxu_shape,
+            hw.flops(pb.in_dtype), hw.kernel_launch,
+            int(cut_m.max()), int(cut_n.max()), int(cut_k.max()),
+            allow_split_k, allow_grouping)
+    hit = _PRUNED_COLS.get(ckey)
+    if hit is None:
+        cols = static_keep & (bm <= ckey[6]) & (bn <= ckey[7]) \
+            & (bk <= ckey[8])
+        if not allow_split_k:
+            cols = cols & ~sk_gt1
+        if not allow_grouping:
+            cols = cols & ~gm_gt1
+        hit = tuple(a[cols] for a in (
+            bm, bn, bk, sk, gm, sched, sk_gt1, gm_gt1, gm_le1,
+            bm_sh, bn_sh, bk_sh, sk_sh, mxu_s, bmn, fill_drain, vols,
+            vmem_base_s))
+        _PRUNED_COLS[ckey] = hit
+    (bm, bn, bk, sk, gm, sched, sk_gt1, gm_gt1, gm_le1,
+     bm_sh, bn_sh, bk_sh, sk_sh, mxu_s, bmn, fill_drain, vols,
+     vmem_base_s) = hit
+    # The split-K / grouping gates usually resolve from row-scalar bounds:
+    # every column has Tm >= cdiv(M, cut_m), so tiles_min >= sk_gate kills
+    # ALL sk>1 columns of the row at once, and K > cut_k forces Tk != 1 for
+    # every column (the no-cache chains' grouping gate).  A row the bounds
+    # fully decide depends only on its (cut_m, cut_n, cut_k) triple, so rows
+    # sharing a triple share ONE keep row; only "fine" rows — where a gate
+    # needs the elementwise test — key on their full shape.  Each distinct
+    # row is computed once on cheap 1-D (P',) columns; the formulas are the
+    # scalar ``_keep_mask`` gates verbatim, so keep matches row for row.
+    S = M.shape[0]
+    sk_any, gm_any = bool(sk_gt1.any()), bool(gm_gt1.any())
+    tiles_min = (-(-M // cut_m)) * (-(-N // cut_n)) * batch       # (S, 1)
+    sk_kill = ((tiles_min >= sk_gate)[:, 0] if sk_any
+               else np.ones(S, bool))
+    if gm_any:
+        gm_fine = ((M <= cut_m) if hw.cache_levels else (K <= cut_k))[:, 0]
+    else:
+        gm_fine = np.zeros(S, bool)
+    fine = (~sk_kill) | gm_fine
+    cm, cn, ck = cut_m[:, 0], cut_n[:, 0], cut_k[:, 0]
+    groups: Dict[Tuple, int] = {}
+    uidx: List[int] = []
+    inv = np.empty(S, np.intp)
+    for r in range(S):
+        gk = ((int(cm[r]), int(cn[r]), int(ck[r]), int(M[r, 0]),
+               int(N[r, 0]), int(K[r, 0]), int(batch[r, 0]))
+              if fine[r] else (int(cm[r]), int(cn[r]), int(ck[r])))
+        gi = groups.get(gk)
+        if gi is None:
+            gi = groups[gk] = len(uidx)
+            uidx.append(r)
+        inv[r] = gi
+    keepg = np.empty((len(uidx), bm.size), bool)
+    base_rows: Dict[Tuple[int, int, int], np.ndarray] = {}
+
+    def _base(r: int) -> np.ndarray:
+        tk_ = (int(cm[r]), int(cn[r]), int(ck[r]))
+        b = base_rows.get(tk_)
+        if b is None:
+            b = base_rows[tk_] = (bm <= tk_[0]) & (bn <= tk_[1]) \
+                & (bk <= tk_[2])
+        return b
+
+    # Coarse rows (bounds fully decide the gates) all share one extra mask.
+    coarse_extra: Optional[np.ndarray] = None
+    fidx: List[Tuple[int, int]] = []
+    for gi, r in enumerate(uidx):
+        r = int(r)
+        if fine[r]:
+            fidx.append((gi, r))
+            continue
+        row = _base(r)
+        if sk_any or (gm_any and not hw.cache_levels):
+            if coarse_extra is None:
+                coarse_extra = np.ones(bm.size, bool)
+                if sk_any:
+                    coarse_extra &= ~sk_gt1
+                if gm_any and not hw.cache_levels:
+                    coarse_extra &= ~gm_gt1          # K > cut_k => Tk != 1
+            row = row & coarse_extra
+        keepg[gi] = row
+    if fidx:
+        # Fine rows: the elementwise gates run as ONE (F, P') broadcast —
+        # same formulas as scalar ``_keep_mask``, selected per row by
+        # np.where, so each row's booleans match the scalar branch taken.
+        gis = [g for g, _ in fidx]
+        rs = [r for _, r in fidx]
+        rows = np.stack([_base(r) for r in rs])          # (F, P')
+        Mf, Nf, Kf, Bf = M[rs, :], N[rs, :], K[rs, :], batch[rs, :]
+        Tmr = (Mf - 1 + bm) >> bm_sh
+        if sk_any:
+            Tnr = (Nf - 1 + bn) >> bn_sh
+            gate = sk_gt1 & ((((Kf - 1 + sk) >> sk_sh) < bk)
+                             | (Tmr * Tnr * Bf >= sk_gate))
+            rows &= ~np.where(sk_kill[rs][:, None], sk_gt1, gate)
+        if gm_any:
+            gmf = gm_fine[rs][:, None]
+            if hw.cache_levels:
+                # gate kills only when Tm < 2 — needs M <= cut_m to fire
+                rows &= ~(gm_gt1 & (Tmr < 2) & gmf)
+            else:
+                gate = gm_gt1 & ((((Kf - 1 + bk) >> bk_sh) != 1)
+                                 | (Tmr < 2))
+                rows &= np.where(gmf, ~gate, ~gm_gt1)
+        keepg[gis] = rows
+    n_cands = np.count_nonzero(keepg, axis=1)[inv]
+    if not n_cands.all():
+        bad = problems[int(np.flatnonzero(n_cands == 0)[0])]
+        raise ValueError(f"empty candidate space for {bad} on {hw.name}")
+
+    # Second compression: score only columns some row keeps.  For large
+    # shapes the split-K / grouping gates kill most of the grid for EVERY
+    # row, so the expensive float64 scoring runs on a fraction of P.
+    live = keepg.any(axis=0)
+    if not live.all():
+        bm, bn, bk, sk, gm, sched = (a[live] for a in
+                                     (bm, bn, bk, sk, gm, sched))
+        bm_sh, bn_sh, bk_sh, sk_sh = (a[live] for a in
+                                      (bm_sh, bn_sh, bk_sh, sk_sh))
+        gm_gt1, gm_le1 = gm_gt1[live], gm_le1[live]
+        mxu_s, bmn, fill_drain, vols = (a[live] for a in
+                                        (mxu_s, bmn, fill_drain, vols))
+        vmem_base_s = vmem_base_s[live]
+        keepg = keepg[:, live]
+    keep = keepg[inv]                                     # (S, P_live)
+
+    bi, bo = DTYPE_BYTES[pb.in_dtype], DTYPE_BYTES[pb.out_dtype]
+    Tm = (M - 1 + bm) >> bm_sh                  # (S, P_live) cdiv via shift
+    Tn = (N - 1 + bn) >> bn_sh
+    if bool((sk == 1).all()):
+        Tk = (K - 1 + bk) >> bk_sh       # sk == 1: split round-trip is id
+    else:
+        k_per_split = (K - 1 + sk) >> sk_sh
+        Tk = ((k_per_split - 1 + bk) >> bk_sh) << sk_sh
+    steps = Tm * Tn * Tk * batch
+
+    ep = pb.epilogue
+    if ep.is_identity:
+        vmem_s = vmem_base_s
+        ce_bytes = np.asarray(M * N * bo, np.float64)
+    else:
+        vmem_s = vmem_base_s + (ep.n_mn_operands * bmn
+                                + int(ep.bias) * bn) * bi / Tk \
+            / hw.vmem_bandwidth
+        ce_bytes = np.asarray(M * N * bo
+                              + (ep.n_mn_operands * M * N
+                                 + int(ep.bias) * N) * bi, np.float64)
+
+    MKbi = np.asarray(M * K * bi, np.float64)
+    KNbi = np.asarray(K * N * bi, np.float64)
+    tk1 = (Tk == 1) if n_cores == 1 else None
+    if tk1 is not None and bool(tk1.any()):
+        a_skip = (tk1 & gm_le1) * ((Tn - 1) / Tn)
+        g = np.minimum(gm, Tm)
+        b_skip = (tk1 & gm_gt1) * ((g - 1) / g)
+        a_bytes = Tn * MKbi * (1.0 - a_skip)
+        b_bytes = Tm * KNbi * (1.0 - b_skip)
+    else:                       # skips all 0.0: x * (1.0 - 0.0) == x, elide
+        a_bytes = Tn * MKbi
+        b_bytes = Tm * KNbi
+    traffic = batch * (a_bytes + b_bytes + ce_bytes)
+
+    mem_s = memory_step_seconds_arrays(pb, hw, traffic, Tm, Tn, Tk,
+                                       bm, bn, gm, steps, sk=sk, sched=sched)
+    occ = occupancy_arrays(pb, hw, Tm, Tn, sk, sched, steps)
+    if isinstance(occ, float):              # single-core chains: occ == 1.0
+        l_iter = np.maximum(np.maximum(mxu_s, vmem_s),
+                            mem_s + hw.dma_fixed)
+    else:
+        l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
+                            mem_s + hw.dma_fixed * occ)
+    scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
+    # Per-row argmin + volume tie-break: argmax returns the FIRST max, which
+    # is exactly the scalar path's earliest-in-enumeration-order policy.
+    smin = scores.min(axis=1, keepdims=True)
+    elig = scores <= smin + 1e-15
+    picks = np.argmax(np.where(elig, vols, -1), axis=1)
+    return [(TileConfig(bm=a, bn=b, bk=c, split_k=d, group_m=e,
+                        schedule=SCHEDULES[f]), n)
+            for a, b, c, d, e, f, n in zip(
+                bm[picks].tolist(), bn[picks].tolist(), bk[picks].tolist(),
+                sk[picks].tolist(), gm[picks].tolist(),
+                sched[picks].tolist(), n_cands.tolist())]
+
+
 def rank_candidates(
     p: GemmProblem,
     hw: HardwareSpec = TPU_V5E,
@@ -591,28 +841,56 @@ _FLUSH_EVERY = 32
 _atexit_registered = False
 
 
-def _disk_record(key: Tuple, sel: Selection, hw: HardwareSpec) -> None:
-    """Record a fresh selection.  Flushes eagerly while the table is small
-    (a restarted server becomes durable immediately) and every
-    ``_FLUSH_EVERY`` entries thereafter — a cold sweep of N shapes pays
-    O(N/32) file rewrites, not O(N); an atexit flush catches the tail."""
-    global _atexit_registered
-    if _disk_table is None:
-        return
+def _disk_entry(sel: Selection, hw: HardwareSpec) -> Dict:
+    """The persisted form of one selection: winning config + candidate count
+    + the topology content fingerprint that invalidates it on recalibration
+    (rehydration reprices the latency, so it is never stored)."""
     c = sel.config
-    _disk_table[_key_str(key)] = {
+    return {
         "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
                    "split_k": c.split_k, "group_m": c.group_m,
                    "schedule": c.schedule},
         "n_candidates": sel.n_candidates,
         "topo": _topo_fingerprint(hw),
     }
+
+
+def _register_atexit_flush() -> None:
+    global _atexit_registered
     if not _atexit_registered:
         atexit.register(save_selection_cache)
         _atexit_registered = True
+
+
+def _disk_record(key: Tuple, sel: Selection, hw: HardwareSpec) -> None:
+    """Record a fresh selection.  Flushes eagerly while the table is small
+    (a restarted server becomes durable immediately) and every
+    ``_FLUSH_EVERY`` entries thereafter — a cold sweep of N shapes pays
+    O(N/32) file rewrites, not O(N); an atexit flush catches the tail."""
+    if _disk_table is None:
+        return
+    _disk_table[_key_str(key)] = _disk_entry(sel, hw)
+    _register_atexit_flush()
     n = len(_disk_table)
     if n <= _FLUSH_EVERY or n % _FLUSH_EVERY == 0:
         save_selection_cache()
+
+
+def _disk_record_bulk(items: Sequence[Tuple[Tuple, Selection]],
+                      hw: HardwareSpec) -> None:
+    """Record N fresh selections with ONE atomic merge-on-write flush —
+    the batched cold path's durability step.  N scalar ``_disk_record``
+    calls pay up to N read-merge-rewrite cycles while the table is small;
+    here the whole batch lands in the in-memory table first and a single
+    ``save_selection_cache`` merges it over whatever concurrent writers
+    put on disk meanwhile (same last-writer-wins-per-key semantics —
+    selections are deterministic, so collisions agree)."""
+    if _disk_table is None or not items:
+        return
+    for key, sel in items:
+        _disk_table[_key_str(key)] = _disk_entry(sel, hw)
+    _register_atexit_flush()
+    save_selection_cache()
 
 
 def _argmin_index(scores: np.ndarray, bm: np.ndarray, bn: np.ndarray,
@@ -670,29 +948,11 @@ def select_gemm_config(
 
     p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
                     out_dtype=out_dtype, batch=batch, epilogue=ep)
-    entry = _disk_lookup(key)
-    if entry is not None:
-        # Warm start: the winning config persisted from a previous process;
-        # reprice it O(1) — no enumeration, no scoring pass.  A malformed
-        # entry, one recorded under different topology constants (the key
-        # carries hw.name, the entry a content fingerprint — recalibration
-        # changes the argmin), or one whose config fails the selection
-        # invariants (placement budget, alignment, power-of-two dims — a
-        # tampered-but-parseable cache entry) falls through to cold scoring.
-        try:
-            best = TileConfig(**entry["config"])
-            n_cands = int(entry["n_candidates"])
-            legal = (entry.get("topo") == _topo_fingerprint(hw)
-                     and validate_selection(p, best, hw) is None)
-        except (KeyError, TypeError, ValueError):
-            legal = False
-        if legal:
-            sel = Selection(problem=p, config=best,
-                            predicted=gemm_latency(p, best, hw),
-                            hardware=hw.name, n_candidates=n_cands)
-            _CACHE[memo_key] = sel
-            _emit_selection(sel, "disk")
-            return sel
+    sel = _rehydrate_disk_entry(p, key, hw)
+    if sel is not None:
+        _CACHE[memo_key] = sel
+        _emit_selection(sel, "disk")
+        return sel
     # Fast O(P) scoring pass (Table II claim): enumeration, filtering and
     # scoring are all one numpy batch — only the winning TileConfig is ever
     # materialized; full latency breakdown for the winner only.
@@ -704,6 +964,108 @@ def select_gemm_config(
     _disk_record(key, sel, hw)
     _emit_selection(sel, "cold")
     return sel
+
+
+def _rehydrate_disk_entry(p: GemmProblem, key: Tuple,
+                          hw: HardwareSpec) -> Optional[Selection]:
+    """Warm start from the persistent table: the winning config persisted by
+    a previous process, repriced O(1) — no enumeration, no scoring pass.
+    A missing/malformed entry, one recorded under different topology
+    constants (the key carries hw.name, the entry a content fingerprint —
+    recalibration changes the argmin), or one whose config fails the
+    selection invariants (placement budget, alignment, power-of-two dims —
+    a tampered-but-parseable cache entry) returns None and the caller falls
+    through to cold scoring."""
+    entry = _disk_lookup(key)
+    if entry is None:
+        return None
+    try:
+        best = TileConfig(**entry["config"])
+        n_cands = int(entry["n_candidates"])
+        legal = (entry.get("topo") == _topo_fingerprint(hw)
+                 and validate_selection(p, best, hw) is None)
+    except (KeyError, TypeError, ValueError):
+        legal = False
+    if not legal:
+        return None
+    return Selection(problem=p, config=best,
+                     predicted=gemm_latency(p, best, hw),
+                     hardware=hw.name, n_candidates=n_cands)
+
+
+def select_gemm_config_batch(
+    shapes: Sequence[Sequence[int]],
+    *,
+    in_dtype: str = "bfloat16",
+    out_dtype: str = "float32",
+    batch: int = 1,
+    epilogue: Optional[Epilogue] = None,
+    hw: HardwareSpec = TPU_V5E,
+    allow_split_k: bool = True,
+    allow_grouping: bool = True,
+) -> List[Selection]:
+    """``select_gemm_config`` for many shapes at once — the serving warm-up
+    / bucket-pricing entry point.  ``shapes`` is a sequence of ``(M, N, K)``
+    or ``(M, N, K, batch)`` tuples sharing dtypes and epilogue.
+
+    Per-shape results are bit-identical to S scalar calls (config AND
+    latency — ``select_fast_batch`` broadcasts the same float64 arithmetic).
+    The difference is cost, not output: memo/disk hits resolve per shape as
+    usual (hooks fire with the same sources), and ALL cold shapes share one
+    (S, P) scoring pass plus one bulk merge-on-write disk flush instead of
+    S passes and up to S file rewrites.  Duplicate cold shapes are scored
+    once and share the resulting Selection (one "cold" hook emission)."""
+    ep = epilogue or EPILOGUE_NONE
+    fp = topology_fingerprint(hw)
+    out: List[Optional[Selection]] = [None] * len(shapes)
+    cold: Dict[Tuple, List[int]] = {}      # key -> indices awaiting scoring
+    cold_probs: Dict[Tuple, GemmProblem] = {}
+    # One availability probe for the whole batch: ``_disk_lookup`` would
+    # re-check the environment per shape only to return None every time.
+    disk_on = _disk_table is not None or bool(os.environ.get(_DISK_ENV))
+    for i, s in enumerate(shapes):
+        M, N, K = int(s[0]), int(s[1]), int(s[2])
+        b = int(s[3]) if len(s) > 3 else batch
+        key = (M, N, K, in_dtype, out_dtype, b, ep, hw.name,
+               allow_split_k, allow_grouping)
+        memo_key = key + (fp,)
+        hit = _CACHE.get(memo_key)
+        if hit is not None:
+            _emit_selection(hit, "memo")
+            out[i] = hit
+            continue
+        if key in cold:                    # duplicate cold shape: share it
+            cold[key].append(i)
+            continue
+        p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
+                        out_dtype=out_dtype, batch=b, epilogue=ep)
+        sel = _rehydrate_disk_entry(p, key, hw) if disk_on else None
+        if sel is not None:
+            _CACHE[memo_key] = sel
+            _emit_selection(sel, "disk")
+            out[i] = sel
+            continue
+        cold[key] = [i]
+        cold_probs[key] = p
+    if cold:
+        keys = list(cold)
+        results = select_fast_batch(
+            [cold_probs[k] for k in keys], hw,
+            allow_split_k=allow_split_k, allow_grouping=allow_grouping)
+        records: List[Tuple[Tuple, Selection]] = []
+        breakdowns = gemm_latency_batch(
+            [cold_probs[k] for k in keys], [r[0] for r in results], hw)
+        for key, (best, n_cands), bd in zip(keys, results, breakdowns):
+            p = cold_probs[key]
+            sel = Selection(problem=p, config=best, predicted=bd,
+                            hardware=hw.name, n_candidates=n_cands)
+            _CACHE[key + (fp,)] = sel
+            records.append((key, sel))
+            for i in cold[key]:
+                out[i] = sel
+            _emit_selection(sel, "cold")
+        _disk_record_bulk(records, hw)
+    return out  # type: ignore[return-value]
 
 
 def clear_selection_cache() -> None:

@@ -1,0 +1,369 @@
+"""Continuous-batching serving engine: request queue -> priced buckets ->
+slot-reuse decode.
+
+The serving hot path the bucketing model prices (DESIGN.md §10):
+
+* **Admission** pops queued requests into free *slots* of a fixed-size
+  decode batch.  With a :class:`~repro.core.bucketing.BucketPlan`, prompts
+  are right-padded to their bucket edge — one prefill executable per edge,
+  not per ragged length — and each row reads its logits out at its true
+  last token (``last_pos``; causal attention makes the padded tail
+  invisible).  Padding is only exact for attention families: SSM/hybrid
+  state would integrate the pad tokens, so those run unpadded (exact,
+  per-length compiles).
+* **Decode** is one step-synchronous jitted call over all slots with a
+  *per-slot position vector* — freshly admitted rows coexist with rows
+  deep into generation; each row masks its own prefix and writes KV at its
+  own offset.  Finished rows free their slot mid-flight and the next
+  request is admitted without stopping the batch.
+* **Warm-up**: every bucket edge's step GEMMs are selected in ONE
+  ``select_gemm_config_batch`` call before serving, so the cold selection
+  cost is paid once, vectorized, instead of per-shape on the first request.
+
+Fail-soft semantics are PR 5's, unchanged: every prefill/decode is
+transient-retried (the fault hook fires BEFORE the donated-cache decode,
+so a retried step replays an intact cache), a
+:class:`~repro.runtime.fault_tolerance.PreemptionGuard` drains cleanly at
+the loop top, and a faulted run's emitted tokens are a bit-exact prefix of
+the clean run's (sampling keys are pre-split per global step, so a retry
+or drain never shifts the key stream).
+
+The decode loop never round-trips to the host: sampled tokens stay on
+device (one stack at end of run), RNG keys are pre-split in chunks, and
+the loop blocks only at ``sync_every`` boundaries — where the
+:class:`~repro.runtime.fault_tolerance.StragglerMonitor` records the pure
+device-step time alongside the host dispatch time.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import BucketPlan, step_gemms
+from repro.core.selector import select_gemm_config_batch
+from repro.kernels import ops
+from repro.nn.model import Model
+from repro.runtime.fault_tolerance import (PreemptionGuard, StragglerMonitor,
+                                           retry)
+
+_STEP_RETRIES = 2
+_STEP_BASE_DELAY = 0.01
+_STEP_MAX_DELAY = 0.1
+_KEY_CHUNK = 64
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (len,) int32 token ids
+    max_new_tokens: int                 # tokens to emit (incl. prefill's)
+    extras: Optional[Dict] = None
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    padded_len: int                     # == prompt_len when unpadded
+    tokens: np.ndarray                  # (n,) generated ids, n<=max_new
+    admit_step: int                     # global step of first decode
+    finish_step: int                    # global step after last decode
+    finished: bool                      # False when drained mid-flight
+
+
+@dataclass
+class _Slot:
+    rid: int = -1
+    pos: int = 0                        # next KV write offset for this row
+    remaining: int = 0
+    admit_step: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.rid >= 0
+
+
+class ServingEngine:
+    """One model, one decode batch of ``max_batch`` slots, FIFO admission.
+
+    ``plan`` (optional) buckets ragged prompt lengths; without it every
+    distinct length prefills at its exact shape.  ``decode_fault`` is the
+    fault-injection hook: called as ``decode_fault(step, guard)`` at the
+    top of every decode attempt, before the cache is donated."""
+
+    def __init__(self, model: Model, params: Dict, *,
+                 max_batch: int, max_len: int,
+                 plan: Optional[BucketPlan] = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 sync_every: int = 8,
+                 decode_fault: Optional[Callable[..., None]] = None,
+                 straggler_window: int = 16, straggler_min_steps: int = 4):
+        cfg = model.cfg
+        if plan is not None and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"bucketed (padded) admission is not exact for family "
+                f"{cfg.family!r}: recurrent state integrates pad tokens. "
+                f"Run without a plan (exact, per-length compiles).")
+        self.model = model
+        self.params = params
+        self.plan = plan
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.temperature = float(temperature)
+        self.sync_every = max(int(sync_every), 1)
+        self.decode_fault = decode_fault
+        self._queue: List[Request] = []
+        self._next_rid = 0
+        self._base_key = jax.random.PRNGKey(seed)
+        self._key_chunks: Dict[int, jax.Array] = {}
+        self.straggler = StragglerMonitor(window=straggler_window,
+                                          min_steps=straggler_min_steps)
+        self.retries = 0
+
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        if self.temperature > 0:
+            t = self.temperature
+
+            def _sample(logits, key):
+                return jax.random.categorical(key, logits / t, axis=-1)
+        else:
+            def _sample(logits, key):
+                return jnp.argmax(logits, axis=-1)
+        self._sample = jax.jit(_sample)
+
+        def _insert(full, part, b):
+            def one(dst, src):
+                start = (jnp.int32(0), b) + (jnp.int32(0),) * (dst.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), start)
+            return jax.tree_util.tree_map(one, full, part)
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               extras: Optional[Dict] = None) -> int:
+        """Enqueue one request; returns its rid.  Validates against the
+        engine's KV budget up front so admission can't overflow the cache."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        padded = (self.plan.bucket_for(prompt.size) if self.plan
+                  else prompt.size)
+        if padded + max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request needs {padded}+{max_new_tokens - 1} cache rows "
+                f"> max_len {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, prompt=prompt,
+                                   max_new_tokens=int(max_new_tokens),
+                                   extras=extras))
+        return rid
+
+    # -- warm-up -----------------------------------------------------------
+
+    def warm_start(self) -> int:
+        """Prime the selector for every shape the serving path will launch:
+        each bucket edge's (or queued length's) step GEMMs plus the decode
+        batch's, in ONE batched selection call.  Returns shapes primed."""
+        cfg = self.model.cfg
+        if cfg.family == "ssm":
+            return 0                          # no attention-step GEMM grid
+        gemms = step_gemms(
+            cfg.d_model, cfg.d_ff,
+            kv_dim=cfg.num_kv_heads * cfg.head_dim,
+            vocab=cfg.vocab_size,
+            swiglu=cfg.activation == "swiglu")
+        ms = set(self.plan.edges if self.plan
+                 else {int(r.prompt.size) for r in self._queue})
+        ms.add(self.max_batch)                # the decode step's M extent
+        shapes = [(m, n, k) for m in sorted(ms) for (n, k) in gemms]
+        select_gemm_config_batch(shapes, hw=ops.get_default_hardware())
+        return len(shapes)
+
+    # -- serving loop ------------------------------------------------------
+
+    def _key(self, step: int) -> jax.Array:
+        c, r = divmod(step, _KEY_CHUNK)
+        chunk = self._key_chunks.get(c)
+        if chunk is None:
+            chunk = self._key_chunks[c] = jax.random.split(
+                jax.random.fold_in(self._base_key, c), _KEY_CHUNK)
+        return chunk[r]
+
+    def _count_retry(self, attempt: int, err: Exception) -> None:
+        self.retries += 1
+        print(f"[engine] transient fault absorbed "
+              f"(attempt {attempt + 1}): {err!r}")
+
+    def run(self) -> Dict:
+        """Serve the queue to completion (or preemption drain); returns the
+        stats dict (see DESIGN.md §10 for the schema)."""
+        cfg = self.model.cfg
+        B = self.max_batch
+        slots = [_Slot() for _ in range(B)]
+        cache = self.model.init_cache(B, self.max_len)
+        tokens = jnp.zeros((B,), jnp.int32)
+        pos_host = [0] * B
+        tok_log: List[jax.Array] = []        # per-step (B,) device arrays
+        owners: List[Tuple[int, ...]] = []   # per-step slot->rid snapshot
+        first_tok: Dict[int, jax.Array] = {}  # rid -> (1,) prefill token
+        meta: Dict[int, Tuple[int, int, int]] = {}  # rid -> (plen,padded,adm)
+        finished: Dict[int, int] = {}        # rid -> finish_step
+        bucket_hits: Dict[int, int] = {}
+        real_rows = padded_rows = 0
+        t_prefill = 0.0
+        dispatch_acc: List[float] = []
+        drained = False
+        step = 0
+        t_sync = None
+
+        def admit(b: int) -> None:
+            nonlocal t_prefill, real_rows, padded_rows, tokens
+            nonlocal cache
+            req = self._queue.pop(0)
+            plen = int(req.prompt.size)
+            padded = (self.plan.bucket_for(plen) if self.plan else plen)
+            prompt = np.zeros((1, padded), np.int32)
+            prompt[0, :plen] = req.prompt
+            last_pos = (jnp.asarray([plen - 1], jnp.int32)
+                        if padded != plen else None)
+            t0 = time.perf_counter()
+            logits, pc = retry(
+                lambda: self._prefill(self.params, jnp.asarray(prompt),
+                                      req.extras or None, last_pos),
+                retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
+                max_delay=_STEP_MAX_DELAY, on_retry=self._count_retry)
+            cache = self._insert(cache, pc, jnp.int32(b))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
+            tokens = tokens.at[b].set(tok[0])
+            t_prefill += time.perf_counter() - t0
+            first_tok[req.rid] = tok
+            slots[b].rid = req.rid
+            slots[b].pos = plen
+            slots[b].remaining = req.max_new_tokens - 1
+            slots[b].admit_step = step
+            pos_host[b] = plen
+            meta[req.rid] = (plen, padded, step)
+            bucket_hits[padded] = bucket_hits.get(padded, 0) + 1
+            real_rows += plen
+            padded_rows += padded
+            if slots[b].remaining == 0:       # single-token request
+                finished[req.rid] = step
+                slots[b].rid = -1
+
+        t_run0 = time.perf_counter()
+        with PreemptionGuard() as guard:
+            while True:
+                if guard.should_stop:
+                    if any(s.active for s in slots) or self._queue:
+                        drained = True
+                        print(f"[engine] preemption requested; draining "
+                              f"after {step} decode steps")
+                    break
+                for b in range(B):
+                    if not slots[b].active and self._queue:
+                        admit(b)
+                if not any(s.active for s in slots):
+                    break
+                pos_dev = jnp.asarray(pos_host, jnp.int32)
+                this_step = step
+
+                def body():
+                    # Fault hook fires BEFORE decode: a retried step
+                    # replays an intact (not-yet-donated) cache.
+                    if self.decode_fault is not None:
+                        self.decode_fault(this_step, guard)
+                    return self._decode(self.params, cache, tokens, pos_dev)
+
+                td0 = time.perf_counter()
+                logits, cache = retry(
+                    body, retries=_STEP_RETRIES,
+                    base_delay=_STEP_BASE_DELAY, max_delay=_STEP_MAX_DELAY,
+                    on_retry=self._count_retry)
+                tokens = self._sample(logits, self._key(step)
+                                      ).astype(jnp.int32)
+                dispatch_acc.append(time.perf_counter() - td0)
+                tok_log.append(tokens)
+                owners.append(tuple(s.rid for s in slots))
+                for b in range(B):
+                    s = slots[b]
+                    if not s.active:
+                        continue
+                    s.pos += 1
+                    pos_host[b] = s.pos
+                    s.remaining -= 1
+                    if s.remaining == 0:
+                        finished[s.rid] = step + 1
+                        s.rid = -1            # slot free: reused next admit
+                step += 1
+                if step % self.sync_every == 0:
+                    tokens.block_until_ready()
+                    now = time.perf_counter()
+                    window = now - (t_sync if t_sync is not None else t_run0)
+                    t_sync = now
+                    n = min(self.sync_every, len(dispatch_acc))
+                    msg = self.straggler.record(
+                        window / max(n, 1),
+                        dispatch_s=sum(dispatch_acc[-n:]) / max(n, 1))
+                    if msg:
+                        print(f"[engine] {msg}")
+        jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t_run0
+        rem = step % self.sync_every
+        if rem:                   # tail window shorter than sync_every:
+            window = time.perf_counter() \
+                - (t_sync if t_sync is not None else t_run0)
+            self.straggler.record(
+                window / rem,
+                dispatch_s=sum(dispatch_acc[-rem:]) / rem)
+
+        # One transfer for the whole run: stack the device-side step log.
+        decoded = (np.asarray(jnp.stack(tok_log)) if tok_log
+                   else np.zeros((0, B), np.int32))
+        firsts = {r: int(np.asarray(t)[0]) for r, t in first_tok.items()}
+        results: Dict[int, RequestResult] = {}
+        emitted = 0
+        for rid, (plen, padded, adm) in meta.items():
+            fin = finished.get(rid, step)
+            cols = [firsts[rid]]
+            for s_ in range(adm, fin):
+                b = owners[s_].index(rid) if rid in owners[s_] else -1
+                if b >= 0:
+                    cols.append(int(decoded[s_, b]))
+            results[rid] = RequestResult(
+                rid=rid, prompt_len=plen, padded_len=padded,
+                tokens=np.asarray(cols, np.int32), admit_step=adm,
+                finish_step=fin, finished=rid in finished)
+            emitted += len(cols)
+        pad_frac = (1.0 - real_rows / padded_rows) if padded_rows else 0.0
+        return {
+            "results": results,
+            "steps": step,
+            "drained": drained,
+            "retries": self.retries,
+            "stragglers": list(self.straggler.flagged),
+            "t_prefill_s": t_prefill,
+            "t_decode_s": t_decode,
+            "tokens_emitted": emitted,
+            "tokens_per_s": emitted / max(t_decode + t_prefill, 1e-9),
+            "bucket_hits": dict(sorted(bucket_hits.items())),
+            "pad_fraction": pad_frac,
+            "dispatch_s_mean": (sum(dispatch_acc) / len(dispatch_acc)
+                                if dispatch_acc else 0.0),
+            "device_step_s_mean": (sum(self.straggler.times)
+                                   / len(self.straggler.times)
+                                   if self.straggler.times else 0.0),
+            "queued_left": len(self._queue),
+        }

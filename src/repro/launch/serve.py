@@ -1,25 +1,36 @@
-"""Batched serving driver: prefill + decode with a sharded KV cache.
+"""Serving driver: continuous-batching engine over ragged or uniform
+requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
         --smoke --batch 4 --prompt-len 32 --gen 32
 
-Requests are processed as a continuous batch: one prefill (returns the
-decode cache), then step-synchronous decode with temperature sampling.
+    # ragged prompts admitted into model-priced buckets:
+    PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+        --smoke --batch 4 --prompt-len 32 --gen 32 --ragged --requests 12
+
+Requests flow through :class:`repro.launch.engine.ServingEngine`: a FIFO
+queue admits prompts into free decode slots (per-request prefill, generic
+slot insert), ragged lengths are right-padded to the edges of a
+model-priced :class:`~repro.core.bucketing.BucketPlan` (attention
+families; exact by causality), finished sequences free their slot
+mid-decode, and every bucket edge's step GEMMs are warm-selected in one
+batched call before serving.  The decode loop is host-round-trip free:
+tokens stay on device until one end-of-run stack, RNG keys are pre-split
+per global step, and the StragglerMonitor reports pure device-step time
+next to host dispatch time.
 
 Set ``REPRO_SELECTION_CACHE=/path/to/selections.json`` to persist GEMM
 config selections across server processes: a warm restart replays every
 previously selected shape from disk with zero cold-path scoring.
 
-Fail-soft serving (DESIGN.md §9): ``--topology`` loads a
-calibrated-topology artifact through the *guarded* loader — a corrupt or
-out-of-tolerance artifact is quarantined and serving continues on the
-stock preset; prefill and every decode step are transient-retried; a
+Fail-soft serving (DESIGN.md §9) is unchanged from the engine's side:
+``--topology`` loads a calibrated-topology artifact through the *guarded*
+loader (corrupt artifacts quarantine, serving continues on the stock
+preset); prefill and every decode step are transient-retried; a
 :class:`~repro.runtime.fault_tolerance.PreemptionGuard` drains the batch
-cleanly on SIGTERM/SIGINT (tokens decoded so far are returned, the guard's
-handlers are restored on exit); a
-:class:`~repro.runtime.fault_tolerance.StragglerMonitor` flags slow decode
-steps.  ``run_serving`` is the library entry point the fault-injection
-suite drives directly (``decode_fault`` hook); ``main`` is the CLI shim.
+cleanly on SIGTERM/SIGINT.  ``run_serving`` is the library entry point the
+fault-injection suite drives directly (``decode_fault`` hook); ``main``
+is the CLI shim.
 """
 from __future__ import annotations
 
@@ -30,33 +41,26 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.bucketing import plan_buckets, step_gemms
 from repro.core.hardware import TPU_V5E
 from repro.core.selector import load_selection_cache
 from repro.core.topology import load_calibrated_topology_guarded
-from repro.distributed import (batch_shardings, cache_shardings,
-                               param_shardings, replicated)
+from repro.distributed import param_shardings
 from repro.kernels import ops
+from repro.launch.engine import ServingEngine
 from repro.launch.mesh import make_local_mesh
 from repro.nn.frontends import synth_frontend_inputs
 from repro.nn.model import Model
-from repro.runtime.fault_tolerance import (PreemptionGuard, StragglerMonitor,
-                                           retry)
-
-# Transient-retry policy for serving steps: short backoff — a decode step
-# retry covers injected/driver transients, not sustained outages.
-_STEP_RETRIES = 2
-_STEP_BASE_DELAY = 0.01
-_STEP_MAX_DELAY = 0.1
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (max concurrent sequences)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -66,13 +70,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="calibrated-topology artifact to select against "
                          "(guarded load: corrupt artifacts quarantine and "
                          "fall back to the stock preset)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="draw ragged prompt lengths in "
+                         "[prompt-len/2, prompt-len] and admit them into "
+                         "model-priced buckets (attention families)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests to serve "
+                         "(default: --batch; ragged default: 2x)")
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between device syncs (straggler "
+                         "sampling granularity)")
     return ap
 
 
 def run_serving(args: argparse.Namespace, *,
                 decode_fault: Optional[Callable[..., None]] = None,
                 ) -> Dict:
-    """Run one continuous batch end to end; returns the serving stats.
+    """Serve one request queue end to end; returns the serving stats.
 
     ``decode_fault(step, guard)``, when given, runs at the top of every
     decode step's retried body — *before* the donated-cache decode
@@ -80,11 +94,14 @@ def run_serving(args: argparse.Namespace, *,
     fault-injection suite's hook (``repro.calib.faults.decode_injector``);
     production never sets it.
 
-    Returns a dict with ``tokens`` (the (batch, steps) generated array),
-    ``drained`` (True when a preemption request stopped decode early),
-    ``steps`` (decode steps completed), ``retries`` (transient retries
-    absorbed), ``stragglers``, timings, and the topology served against
-    (plus ``degraded`` when the artifact was rejected).
+    Returns a dict with ``tokens`` (uniform mode: the (batch, steps+1)
+    generated array including the prefill token; ragged mode: a list of
+    per-request arrays), ``drained`` (True when a preemption request
+    stopped decode early), ``steps`` (decode steps completed), ``retries``
+    (transient retries absorbed), ``stragglers``, timings, engine stats
+    (``pad_fraction``, ``bucket_hits``, ``dispatch_s_mean``,
+    ``device_step_s_mean``, ``tokens_per_s``), and the topology served
+    against (plus ``degraded`` when the artifact was rejected).
     """
     n_warm = load_selection_cache()            # $REPRO_SELECTION_CACHE
     if n_warm:
@@ -107,104 +124,102 @@ def run_serving(args: argparse.Namespace, *,
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
-    mesh = make_local_mesh(tp=args.tp)
     max_len = args.prompt_len + args.gen
+    ragged = bool(getattr(args, "ragged", False))
+    n_req = getattr(args, "requests", None) or (
+        2 * args.batch if ragged else args.batch)
 
     rng = jax.random.PRNGKey(args.seed)
+    mesh = make_local_mesh(tp=args.tp)
     p_sh = param_shardings(model, mesh)
     params = jax.jit(model.init, out_shardings=p_sh)(rng)
 
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len),
-                                 0, cfg.vocab_size)
-    extras = synth_frontend_inputs(cfg, rng, args.batch, args.prompt_len)
+    # Request prompts: uniform rows of prompt-len, or ragged truncations.
+    prompts = np.asarray(jax.random.randint(
+        rng, (n_req, args.prompt_len), 0, cfg.vocab_size), np.int32)
+    extras = synth_frontend_inputs(cfg, rng, n_req, args.prompt_len)
+    if ragged:
+        lo = max(args.prompt_len // 2, 4)
+        lens = np.random.default_rng(args.seed).integers(
+            lo, args.prompt_len + 1, size=n_req).tolist()
+    else:
+        lens = [args.prompt_len] * n_req
 
-    retries = 0
+    plan = None
+    if ragged and cfg.family not in ("ssm", "hybrid"):
+        plan = plan_buckets(
+            lens,
+            gemms=step_gemms(cfg.d_model, cfg.d_ff,
+                             kv_dim=cfg.num_kv_heads * cfg.head_dim,
+                             vocab=cfg.vocab_size,
+                             swiglu=cfg.activation == "swiglu"),
+            hw=ops.get_default_hardware(), max_buckets=4)
+        print(f"[serve] priced bucket edges: {list(plan.edges)} "
+              f"(modeled step {plan.modeled_total_s * 1e3:.2f}ms, "
+              f"pad {plan.pad_fraction * 100:.1f}%)")
 
-    def _count_retry(attempt: int, err: Exception) -> None:
-        nonlocal retries
-        retries += 1
-        print(f"[serve] transient fault absorbed "
-              f"(attempt {attempt + 1}): {err!r}")
+    engine = ServingEngine(
+        model, params, max_batch=args.batch, max_len=max_len, plan=plan,
+        temperature=args.temperature, seed=args.seed,
+        sync_every=getattr(args, "sync_every", 8),
+        decode_fault=decode_fault,
+        straggler_window=16, straggler_min_steps=4)
 
-    # Prefill: logits for the last prompt position + the decode cache.
-    prefill = jax.jit(model.prefill)
+    def _extras(i):
+        if not extras:
+            return None
+        return jax.tree_util.tree_map(lambda x: x[i:i + 1], extras)
+
+    for i in range(n_req):
+        engine.submit(prompts[i, :lens[i]], max_new_tokens=args.gen,
+                      extras=_extras(i))
+
     t0 = time.time()
-    logits, cache = retry(
-        lambda: prefill(params, prompts, extras or None),
-        retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
-        max_delay=_STEP_MAX_DELAY, on_retry=_count_retry)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    warmed = engine.warm_start()
+    if warmed:
+        print(f"[serve] warm-started {warmed} serving GEMM shapes in one "
+              f"batched selection pass ({(time.time() - t0) * 1e3:.0f}ms)")
 
-    # Pad / place the cache for max_len decoding.
-    full_cache = model.init_cache(args.batch, max_len)
+    stats = engine.run()
+    results = stats["results"]
+    n_steps = stats["steps"]
 
-    def place(dst, src):
-        if dst.ndim >= 4 and dst.shape != src.shape:   # KV: (L,B,H,S,d)
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), 0, axis=3)
-        return src.astype(dst.dtype)
+    rows = [results[r].tokens for r in sorted(results)]
+    if (not ragged and n_req == args.batch
+            and len({len(r) for r in rows}) <= 1):
+        # Uniform mode: all requests admitted together and same length —
+        # the legacy (batch, steps+1) matrix, prefill token first.
+        tokens = (np.stack(rows) if rows else np.zeros((0, 0), np.int32))
+    else:
+        tokens = rows
 
-    cache = jax.tree_util.tree_map(place, full_cache, cache)
-
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    straggler = StragglerMonitor(window=16, min_steps=4)
-    sample_rng = rng
-    tokens = jnp.argmax(logits, axis=-1)
-    out = [np.asarray(tokens)]
-    drained = False
-    t0 = time.time()
-    with PreemptionGuard() as guard:
-        for i in range(args.gen - 1):
-            if guard.should_stop:
-                # Clean drain: stop issuing steps, keep what is decoded.
-                drained = True
-                print(f"[serve] preemption requested; draining after "
-                      f"{i} decode steps")
-                break
-            pos = jnp.int32(args.prompt_len + i)
-
-            def step():
-                # The fault hook fires BEFORE decode so a retried step
-                # replays an intact (not-yet-donated) cache.
-                if decode_fault is not None:
-                    decode_fault(i, guard)
-                return decode(params, cache, tokens, pos)
-
-            ts = time.time()
-            logits, cache = retry(
-                step, retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
-                max_delay=_STEP_MAX_DELAY, on_retry=_count_retry)
-            sample_rng, sub = jax.random.split(sample_rng)
-            if args.temperature > 0:
-                tokens = jax.random.categorical(
-                    sub, logits / args.temperature, axis=-1)
-            else:
-                tokens = jnp.argmax(logits, axis=-1)
-            out.append(np.asarray(tokens))
-            msg = straggler.record(time.time() - ts)
-            if msg:
-                print(f"[serve] {msg}")
-    jax.block_until_ready(tokens)
-    t_decode = time.time() - t0
-
-    gen = np.stack(out, axis=1)
-    n_steps = gen.shape[1] - 1                 # decode steps completed
-    toks_per_s = args.batch * n_steps / max(t_decode, 1e-9)
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prefill {args.prompt_len} tok in {t_prefill*1e3:.0f}ms; "
+    toks_per_s = stats["tokens_per_s"]
+    print(f"arch={cfg.name} batch={args.batch} requests={n_req} "
+          f"prefill {args.prompt_len} tok in "
+          f"{stats['t_prefill_s'] * 1e3:.0f}ms; "
           f"decoded {n_steps} steps at {toks_per_s:.1f} tok/s total")
+    print(f"[serve] dispatch {stats['dispatch_s_mean'] * 1e3:.2f}ms/step "
+          f"vs device {stats['device_step_s_mean'] * 1e3:.2f}ms/step; "
+          f"padding {stats['pad_fraction'] * 100:.1f}%; "
+          f"bucket hits {stats['bucket_hits']}")
+    show = tokens if ragged else tokens[:2]
     print("sample generations (first 2 rows, first 16 tokens):")
-    for row in gen[:2]:
-        print("  ", row[:16].tolist())
+    for row in list(show)[:2]:
+        print("  ", np.asarray(row)[:16].tolist())
     return {
-        "tokens": gen,
+        "tokens": tokens,
         "steps": n_steps,
-        "drained": drained,
-        "retries": retries,
-        "stragglers": list(straggler.flagged),
-        "t_prefill_s": t_prefill,
-        "t_decode_s": t_decode,
+        "drained": stats["drained"],
+        "retries": stats["retries"],
+        "stragglers": stats["stragglers"],
+        "t_prefill_s": stats["t_prefill_s"],
+        "t_decode_s": stats["t_decode_s"],
+        "tokens_per_s": toks_per_s,
+        "pad_fraction": stats["pad_fraction"],
+        "bucket_hits": stats["bucket_hits"],
+        "dispatch_s_mean": stats["dispatch_s_mean"],
+        "device_step_s_mean": stats["device_step_s_mean"],
+        "results": results,
         **topo_info,
     }
 

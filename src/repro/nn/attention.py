@@ -140,16 +140,28 @@ def decode_attention(
     group = H // Hkv
     scale = scale if scale is not None else d ** -0.5
     k_pos = jnp.arange(S)
-    mask = k_pos <= pos
-    if sliding_window > 0:
-        mask = mask & (pos - k_pos < sliding_window)
+    if jnp.ndim(pos) == 0:
+        # Scalar step (step-synchronous batch): mask broadcasts over B.
+        mask = k_pos <= pos
+        if sliding_window > 0:
+            mask = mask & (pos - k_pos < sliding_window)
+        mask_packed = mask.reshape(1, 1, 1, S)
+        mask_flat = mask.reshape(1, 1, S)
+    else:
+        # Per-slot positions (continuous batching): each row masks its own
+        # prefix, so slots mid-decode coexist with freshly admitted ones.
+        mask = k_pos[None, :] <= pos[:, None]                 # (B, S)
+        if sliding_window > 0:
+            mask = mask & (pos[:, None] - k_pos[None, :] < sliding_window)
+        mask_packed = mask[:, None, None, :]
+        mask_flat = mask[:, None, :]
 
     if group > 1 and gqa_packed:
         qg = q[:, :, 0].reshape(B, Hkv, group, d).astype(jnp.float32) * scale
         s = jnp.einsum("bhgd,bhkd->bhgk", qg,
                        k_cache.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
-        s = jnp.where(mask.reshape(1, 1, 1, S), s, NEG_INF)
+        s = jnp.where(mask_packed, s, NEG_INF)
         m = jnp.max(s, axis=-1, keepdims=True)
         p = jnp.exp(s - m)
         p = p / jnp.sum(p, axis=-1, keepdims=True)
@@ -164,7 +176,7 @@ def decode_attention(
     qh = q[:, :, 0].astype(jnp.float32) * scale          # (B, H, d)
     s = jnp.einsum("bhd,bhkd->bhk", qh, k_cache.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
-    s = jnp.where(mask.reshape(1, 1, S), s, NEG_INF)
+    s = jnp.where(mask_flat, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     p = p / jnp.sum(p, axis=-1, keepdims=True)

@@ -210,11 +210,24 @@ def attn_decode(
     q = dense(h, p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
     k = dense(h, p["wk"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
     v = dense(h, p["wv"]).reshape(B, 1, Hkv, hd).transpose(0, 2, 1, 3)
-    posv = jnp.reshape(pos, (1,))
-    q = rope(q, posv, cfg.rope_theta)
-    k = rope(k, posv, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
+    if jnp.ndim(pos) == 0:
+        posv = jnp.reshape(pos, (1,))
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos,
+                                                      axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos,
+                                                      axis=2)
+    else:
+        # Per-slot positions (continuous batching): rope per row, and each
+        # row's new KV lands at that row's own cache offset.
+        posv = jnp.reshape(pos, (B, 1))
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+        upd = jax.vmap(lambda c, blk, i:
+                       jax.lax.dynamic_update_slice_in_dim(c, blk, i, axis=1))
+        k_cache = upd(cache["k"], k, pos)
+        v_cache = upd(cache["v"], v, pos)
     out = attn_lib.decode_attention(
         q, k_cache, v_cache, pos=pos, sliding_window=cfg.sliding_window,
         gqa_packed=cfg.gqa_packed_decode)

@@ -44,8 +44,11 @@ class Model:
                           preferred_element_type=jnp.float32)
 
     def prefill(self, params: Dict, tokens: jax.Array,
-                extras: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
-        return T.prefill_forward(params, tokens, self.cfg, extras=extras)
+                extras: Optional[Dict] = None,
+                last_pos: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict]:
+        return T.prefill_forward(params, tokens, self.cfg, extras=extras,
+                                 last_pos=last_pos)
 
     def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
                     pos: jax.Array) -> Tuple[jax.Array, Dict]:

@@ -201,8 +201,14 @@ def prefill_forward(
     cfg: ModelConfig,
     *,
     extras: Optional[Dict] = None,
+    last_pos: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
-    """Returns (last-position logits (B, V), decode cache)."""
+    """Returns (last-position logits (B, V), decode cache).
+
+    ``last_pos`` (B,) gathers each row's logits at its own final *real*
+    position instead of column -1 — the ragged-admission path: prompts
+    right-padded to a bucket edge still read out at their true last token
+    (causal attention makes the padded tail invisible to that position)."""
     x = embed_tokens(params, tokens, cfg, extras)
     S = tokens.shape[1]
     positions = jnp.arange(S)
@@ -231,7 +237,9 @@ def prefill_forward(
         x, cache = scanning.scan(body, x, params["layers"])
 
     x = L.norm(x, params["final_norm"], cfg)
-    logits = jnp.matmul(x[:, -1], lm_head_weight(params, cfg),
+    last = (x[:, -1] if last_pos is None
+            else x[jnp.arange(x.shape[0]), last_pos])
+    logits = jnp.matmul(last, lm_head_weight(params, cfg),
                         preferred_element_type=jnp.float32)
     return logits, cache
 

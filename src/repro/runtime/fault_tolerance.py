@@ -34,14 +34,23 @@ class StragglerMonitor:
     def __init__(self, window: int = 50, z_threshold: float = 4.0,
                  min_steps: int = 10):
         self.times: Deque[float] = deque(maxlen=window)
+        self.dispatch_times: Deque[float] = deque(maxlen=window)
         self.z = z_threshold
         self.min_steps = min_steps
         self.flagged: List[Tuple[int, float, float]] = []
         self._step = 0
 
-    def record(self, seconds: float) -> Optional[str]:
+    def record(self, seconds: float,
+               dispatch_s: Optional[float] = None) -> Optional[str]:
+        """Record one step.  ``seconds`` is the step's wall/device time the
+        z-score watches; ``dispatch_s`` optionally tracks the host-side
+        enqueue cost separately — an async decode loop that never blocks
+        has ~µs dispatches, and a dispatch that creeps toward the device
+        time means the host round-trips (the bug this channel surfaces)."""
         self._step += 1
         msg = None
+        if dispatch_s is not None:
+            self.dispatch_times.append(dispatch_s)
         if len(self.times) >= self.min_steps:
             mean = sum(self.times) / len(self.times)
             var = sum((t - mean) ** 2 for t in self.times) / len(self.times)
@@ -53,6 +62,13 @@ class StragglerMonitor:
                        f"(z={z:.1f}, mean={mean:.3f}s)")
         self.times.append(seconds)
         return msg
+
+    def dispatch_mean(self) -> float:
+        """Mean host-side dispatch seconds over the window (0.0 if the
+        caller never supplied the channel)."""
+        if not self.dispatch_times:
+            return 0.0
+        return sum(self.dispatch_times) / len(self.dispatch_times)
 
 
 _TRANSIENT_MARKERS = (

@@ -1,0 +1,170 @@
+"""Batched selection (``select_gemm_config_batch``) is a COST optimization,
+not a semantic one: every per-shape result must be bit-identical to the
+scalar API — config, candidate count, and every float of the predicted
+LatencyBreakdown down to the bit pattern (``float.hex``).  Covers all five
+hardware presets x dtype pairs x epilogues, the memo/disk/cold source mix
+(observed through the selection hooks), duplicate-shape sharing, the
+single bulk disk flush, and the error paths.
+"""
+import dataclasses
+
+import pytest
+
+import repro.core.selector as selmod
+from repro.core import (Epilogue, GemmProblem, clear_selection_cache,
+                        get_hardware, select_gemm_config)
+from repro.core.latency import TileConfig, gemm_latency_batch
+from repro.core.selector import (add_selection_hook, load_selection_cache,
+                                 remove_selection_hook,
+                                 select_gemm_config_batch)
+
+PRESETS = ["tpu_v5e", "tpu_v5p", "tpu_v4", "gpu_mi300x_like",
+           "gpu_h100_like"]
+
+SHAPES = [(256, 256, 256), (512, 512, 512), (1024, 1024, 1024),
+          (128, 4096, 4096), (4096, 128, 4096), (4096, 4096, 128),
+          (1, 8192, 8192), (640, 1920, 2560), (48, 14336, 4096),
+          (2048, 128256, 4096)]
+
+VARIANTS = [
+    dict(in_dtype="bfloat16", out_dtype="float32", epilogue=None, batch=1),
+    dict(in_dtype="float32", out_dtype="float32",
+         epilogue=Epilogue(bias=True, activation="gelu"), batch=1),
+    dict(in_dtype="int8", out_dtype="bfloat16",
+         epilogue=Epilogue(activation="swiglu_gate", residual=True),
+         batch=4),
+]
+
+
+def _assert_breakdown_identical(a, b):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float):
+            assert va.hex() == vb.hex(), (f.name, va, vb)
+        elif isinstance(va, dict):
+            assert set(va) == set(vb), f.name
+            for k in va:
+                assert va[k].hex() == vb[k].hex(), (f.name, k)
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+@pytest.mark.parametrize("hw_name", PRESETS)
+def test_batch_bit_identical_to_scalar(hw_name):
+    hw = get_hardware(hw_name)
+    for kw in VARIANTS:
+        clear_selection_cache()
+        ref = [select_gemm_config(m, n, k, hw=hw, **kw)
+               for m, n, k in SHAPES]
+        clear_selection_cache()
+        got = select_gemm_config_batch(SHAPES, hw=hw, **kw)
+        for a, b in zip(ref, got):
+            assert a.config == b.config
+            assert a.n_candidates == b.n_candidates
+            _assert_breakdown_identical(a.predicted, b.predicted)
+
+
+def test_sources_memo_and_cold():
+    """Pre-warmed shapes resolve from the memo, the rest cold — hook
+    sources and results both match the scalar API's."""
+    clear_selection_cache()
+    hw = get_hardware("tpu_v5e")
+    warm = SHAPES[:3]
+    for m, n, k in warm:
+        select_gemm_config(m, n, k, hw=hw)
+    seen = []
+    hook = lambda sel, src: seen.append((sel.problem.M, src))  # noqa: E731
+    add_selection_hook(hook)
+    try:
+        sels = select_gemm_config_batch(SHAPES, hw=hw)
+    finally:
+        remove_selection_hook(hook)
+    srcs = dict(s for s in seen)
+    for i, (m, n, k) in enumerate(SHAPES):
+        expect = "memo" if (m, n, k) in warm else "cold"
+        assert srcs[m] == expect, (m, srcs[m])
+        assert sels[i].config == select_gemm_config(m, n, k, hw=hw).config
+
+
+def test_source_disk_roundtrip(tmp_path, monkeypatch):
+    """A second 'process' (memo cleared, table reloaded) warm-starts the
+    whole batch from disk with identical selections."""
+    path = str(tmp_path / "selections.json")
+    monkeypatch.setenv("REPRO_SELECTION_CACHE", path)
+    load_selection_cache(path)
+    clear_selection_cache()
+    try:
+        first = select_gemm_config_batch(SHAPES)
+        clear_selection_cache()
+        load_selection_cache(path)                   # fresh process state
+        seen = []
+        hook = lambda sel, src: seen.append(src)     # noqa: E731
+        add_selection_hook(hook)
+        try:
+            second = select_gemm_config_batch(SHAPES)
+        finally:
+            remove_selection_hook(hook)
+        assert seen == ["disk"] * len(SHAPES)
+        for a, b in zip(first, second):
+            assert a.config == b.config
+            assert a.predicted.total.hex() == b.predicted.total.hex()
+    finally:
+        monkeypatch.delenv("REPRO_SELECTION_CACHE")
+        load_selection_cache()
+        clear_selection_cache()
+
+
+def test_bulk_flush_is_one_write(tmp_path, monkeypatch):
+    """N cold shapes -> ONE merge-on-write save, not O(N) rewrites."""
+    path = str(tmp_path / "selections.json")
+    monkeypatch.setenv("REPRO_SELECTION_CACHE", path)
+    load_selection_cache(path)
+    clear_selection_cache()
+    calls = []
+    real = selmod.save_selection_cache
+    monkeypatch.setattr(selmod, "save_selection_cache",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    try:
+        select_gemm_config_batch(SHAPES)
+        assert len(calls) == 1
+        assert len(selmod._disk_table) == len(SHAPES)
+    finally:
+        monkeypatch.setattr(selmod, "save_selection_cache", real)
+        monkeypatch.delenv("REPRO_SELECTION_CACHE")
+        load_selection_cache()
+        clear_selection_cache()
+
+
+def test_duplicate_cold_shapes_share_one_selection():
+    clear_selection_cache()
+    seen = []
+    hook = lambda sel, src: seen.append(src)         # noqa: E731
+    add_selection_hook(hook)
+    try:
+        sels = select_gemm_config_batch([(512, 512, 512)] * 4)
+    finally:
+        remove_selection_hook(hook)
+    assert seen == ["cold"]                          # scored exactly once
+    assert all(s is sels[0] for s in sels)
+
+
+def test_four_tuple_shapes_set_per_shape_batch():
+    clear_selection_cache()
+    got = select_gemm_config_batch([(256, 512, 1024, 8)])
+    ref = select_gemm_config(256, 512, 1024, batch=8)
+    assert got[0].config == ref.config
+    assert got[0].predicted.total.hex() == ref.predicted.total.hex()
+
+
+def test_empty_batch_returns_empty():
+    assert select_gemm_config_batch([]) == []
+
+
+def test_gemm_latency_batch_rejects_nonuniform():
+    a = GemmProblem(M=256, N=256, K=256, in_dtype="bfloat16")
+    b = GemmProblem(M=256, N=256, K=256, in_dtype="float32")
+    t = TileConfig(bm=128, bn=128, bk=128, split_k=1, group_m=1,
+                   schedule="data_parallel")
+    hw = get_hardware("tpu_v5e")
+    with pytest.raises(ValueError):
+        gemm_latency_batch([a, b], [t, t], hw)

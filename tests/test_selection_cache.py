@@ -173,3 +173,26 @@ def test_legacy_entry_without_schedule_still_rehydrates(cache_path):
     s2 = select_gemm_config(1536, 1536, 1536)
     assert s2.config == s1.config
     assert s2.config.schedule == "data_parallel"
+
+
+def test_bulk_flush_merges_with_concurrent_writer(cache_path):
+    """The batched cold path's ONE bulk flush lands in the same TOCTOU
+    window as a concurrent writer's: our table was loaded (empty) before
+    the other writer flushed, so a plain write would clobber it.  The bulk
+    merge-on-write must preserve the concurrent entries AND persist every
+    batch entry."""
+    from repro.core.selector import select_gemm_config_batch
+
+    select_gemm_config(1536, 1536, 1536)              # writer A, flushed
+    a_table = json.load(open(cache_path))
+    assert len(a_table) == 1
+
+    # Writer B: table snapshot from BEFORE A's flush (empty), then a whole
+    # batch of cold selections -> one bulk flush.
+    selmod._disk_table = {}
+    clear_selection_cache()
+    shapes = [(m, m, m) for m in (256, 512, 768, 1024, 1280)]
+    select_gemm_config_batch(shapes)
+    merged = json.load(open(cache_path))
+    assert set(a_table) < set(merged)                 # A's entry survived
+    assert len(merged) == 1 + len(shapes)
