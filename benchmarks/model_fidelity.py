@@ -7,11 +7,14 @@ selection achieves (paper's >95% headline claim).  Artifacts land in
 ``experiments/calib/fidelity_report.{json,csv,md}``.
 
     PYTHONPATH=src python -m benchmarks.model_fidelity [--smoke | --full]
-        [--presets a,b,...]
+        [--presets a,b,...] [--pruned]
 
 ``--smoke`` divides the shapes by 8 (exhaustive simulation of several
 hundred candidates per shape is minutes per GPU preset at full scale) —
-the CI rot check; ``--full`` runs 8b+70b at three token counts.
+the CI rot check; ``--full`` runs 8b+70b at three token counts.  The
+oracle prices the WHOLE menu unpruned by default (one batched simulator
+pass per shape); ``--pruned`` restores the lower-bound-pruned scalar
+search for A/B-ing the bound.
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ from repro.core import PRESETS
 
 
 def run(presets: Optional[Sequence[str]] = None, smoke: bool = False,
-        full: bool = False, verbose: bool = True) -> Dict:
+        full: bool = False, verbose: bool = True,
+        prune: bool = False) -> Dict:
     presets = tuple(presets or sorted(PRESETS))
     if full:
         sizes, tokens, scale = ("8b", "70b"), (1024, 4096, 8192), 1
@@ -32,7 +36,7 @@ def run(presets: Optional[Sequence[str]] = None, smoke: bool = False,
     else:
         sizes, tokens, scale = ("8b",), (1024,), 1
     return fidelity_report(presets=presets, sizes=sizes, tokens=tokens,
-                           scale=scale, verbose=verbose)
+                           scale=scale, verbose=verbose, prune=prune)
 
 
 def main():
@@ -43,9 +47,12 @@ def main():
                     help="8b + 70b at all token counts (slow)")
     ap.add_argument("--presets", default=None,
                     help="comma-separated preset names (default: all)")
+    ap.add_argument("--pruned", action="store_true",
+                    help="lower-bound-pruned oracle search instead of the "
+                         "batched full-menu sweep")
     args = ap.parse_args()
     run(presets=args.presets.split(",") if args.presets else None,
-        smoke=args.smoke, full=args.full)
+        smoke=args.smoke, full=args.full, prune=args.pruned)
 
 
 if __name__ == "__main__":

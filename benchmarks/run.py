@@ -70,6 +70,15 @@ def main() -> None:
           f"mem={bs['mem_speedup']:.1f}x_disk={bs['disk_speedup']:.1f}x_"
           f"n={bs['n_shapes']}")
 
+    # §Oracle pricing — batched full-menu simulation vs P scalar event
+    # loops (one unpruned exhaustive-oracle shape; smoke shrinks the
+    # shape so the rot check stays seconds, not minutes).
+    sb = selection_overhead.measure_simulator_batch(
+        repeats=1 if args.smoke else 3, verbose=False,
+        shape=(256, 1024, 1024) if args.smoke else (1024, 4096, 4096))
+    print(f"simulator_batch,{sb['batch_s']*1e6:.1f},"
+          f"speedup={sb['speedup']:.2f}x_P={sb['n_candidates']}")
+
     # §Serving — continuous batching over ragged requests: model-priced
     # buckets vs the pow2 baseline (same requests, same tokens).
     t0 = time.perf_counter()

@@ -24,7 +24,8 @@ from repro.core import (GemmProblem, candidate_tiles, clear_selection_cache,
                         score_candidate, select_gemm_config)
 from repro.core.hardware import TPU_V5E
 from repro.core.selector import (load_selection_cache, select_fast,
-                                 select_gemm_config_batch)
+                                 select_gemm_config_batch,
+                                 unload_selection_cache)
 from repro.kernels import matmul
 
 
@@ -165,6 +166,7 @@ def measure_batch_selection(repeats: int = 5, verbose: bool = True) -> Dict:
                 os.environ.pop("REPRO_SELECTION_CACHE", None)
             else:
                 os.environ["REPRO_SELECTION_CACHE"] = prev
+            unload_selection_cache()                # drop temp-dir path
             load_selection_cache()                  # restore prior state
             clear_selection_cache()
     out["disk_scalar_s"] = min(ts)
@@ -186,6 +188,54 @@ def measure_batch_selection(repeats: int = 5, verbose: bool = True) -> Dict:
               f"disk-recording {out['disk_scalar_s']*1e3:.2f}ms -> "
               f"{out['disk_batch_s']*1e3:.2f}ms "
               f"({out['disk_speedup']:.1f}x)")
+    return out
+
+
+def measure_simulator_batch(repeats: int = 3, verbose: bool = True,
+                            shape: tuple = (1024, 4096, 4096)) -> Dict:
+    """Batched oracle pricing (``simulate_gemm_batch``) vs P scalar
+    ``simulate_gemm`` calls over a full multi-core candidate menu — the
+    cost of one unpruned exhaustive-oracle shape, the sweep the nightly
+    fidelity job runs per llama3 GEMM.
+
+    Best-of-``repeats`` wall times (the file's convention); every repeat
+    asserts the batched results are bit-identical to the scalar ones
+    (seconds and per-level byte ledgers down to the float bit pattern).
+    Placement (pass 1) is per-candidate Python in both paths, so the
+    speedup measures what vectorizing the pricing pass (populations +
+    per-core byte clocks) actually buys."""
+    from repro.core.hardware import GPU_H100_LIKE
+    from repro.core.simulator import simulate_gemm, simulate_gemm_batch
+
+    hw = GPU_H100_LIKE
+    p = GemmProblem(M=shape[0], N=shape[1], K=shape[2])
+    cands = candidate_tiles(p, hw)
+
+    def check(ref, got):
+        assert len(ref) == len(got)
+        for a, b in zip(ref, got):
+            assert a.time.hex() == b.time.hex(), (a.time, b.time)
+            assert {k: v.hex() for k, v in a.level_bytes.items()} \
+                == {k: v.hex() for k, v in b.level_bytes.items()}
+
+    t_sc, t_ba = float("inf"), float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ref = [simulate_gemm(p, t, hw) for t in cands]
+        t_sc = min(t_sc, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        got = simulate_gemm_batch(p, cands, hw)
+        t_ba = min(t_ba, time.perf_counter() - t0)
+        check(ref, got)
+    out = {"n_candidates": len(cands), "scalar_s": t_sc, "batch_s": t_ba,
+           "speedup": t_sc / t_ba}
+    write_csv("simulator_batch.csv",
+              ["preset", "P", "scalar_s", "batch_s", "speedup"],
+              [[hw.name, len(cands), t_sc, t_ba, out["speedup"]]])
+    if verbose:
+        print(f"[simbatch] {hw.name} {p.M}x{p.N}x{p.K} P={len(cands)}: "
+              f"scalar {t_sc:.2f}s -> batch {t_ba:.2f}s "
+              f"({out['speedup']:.2f}x, bit-identical)")
     return out
 
 

@@ -32,7 +32,8 @@ from typing import Optional, Protocol, runtime_checkable
 
 from repro.core.latency import GemmProblem, TileConfig
 from repro.core.simulator import (simulate_compute, simulate_gemm,
-                                  simulate_stream, simulate_wave)
+                                  simulate_gemm_batch, simulate_stream,
+                                  simulate_wave)
 from repro.core.topology import Topology
 
 
@@ -101,6 +102,16 @@ class VirtualDevice:
         # The oracle's per-candidate price: the event-level simulator, which
         # shares no scoring logic with the closed-form model it judges.
         return simulate_gemm(p, t, self.planted).time
+
+    def gemm_time_batch(self, p: GemmProblem, candidates) -> list:
+        """Whole-menu pricing through the vectorized simulator — bit-identical
+        to ``[self.gemm_time(p, t) for t in candidates]`` (the batched pricer
+        shares the scalar placement pass and reduces in the same order), at
+        the cost of one numpy pass instead of P python event loops.  The
+        unpruned oracle's fast path; optional on the Device protocol —
+        callers feature-detect with ``hasattr``."""
+        return [r.time for r in simulate_gemm_batch(p, candidates,
+                                                    self.planted)]
 
 
 class JaxDevice:

@@ -101,10 +101,33 @@ def oracle_best(p: GemmProblem, hw: Topology, device: Device,
     Measurements that are non-finite, non-positive (a NaN-poisoned or
     sign-flipped timer would otherwise *win* the argmin), or that raise a
     runtime error are skipped — the oracle reports the best candidate the
-    device measured honestly (DESIGN.md §9)."""
+    device measured honestly (DESIGN.md §9).
+
+    An unpruned sweep on a device exposing ``gemm_time_batch`` (the
+    vectorized simulator behind :class:`VirtualDevice`) prices the whole
+    menu in one batched pass — same per-candidate seconds, same
+    argmin/tie-break order (first strict improvement in visit order) —
+    which is what makes the nightly full-menu sweep affordable.  Fault-
+    injecting or wall-clock devices don't expose it and keep the scalar
+    loop."""
+    if not candidates:
+        raise ValueError("oracle_best: empty candidate menu")
     best_t, best_s = None, float("inf")
     pruned = 0
     idxs = order if order is not None else range(len(candidates))
+    if not prune and hasattr(device, "gemm_time_batch"):
+        try:
+            times = device.gemm_time_batch(p, candidates)
+        except RuntimeError:
+            times = None
+        if times is not None:
+            for i in idxs:
+                s = times[i]
+                if not np.isfinite(s) or s <= 0.0:
+                    continue
+                if s < best_s:
+                    best_t, best_s = candidates[i], s
+            return best_t, best_s, 0
     for i in idxs:
         t = candidates[i]
         if prune and best_t is not None \
@@ -167,10 +190,11 @@ def scaled_llama3_shapes(sizes: Sequence[str] = ("8b",),
 
 def fidelity_sweep(hw: Topology, device: Device,
                    shapes: Sequence[Tuple[str, int, int, int]],
-                   verbose: bool = False) -> List[OracleRow]:
+                   verbose: bool = False,
+                   prune: bool = True) -> List[OracleRow]:
     rows = []
     for (name, M, N, K) in shapes:
-        row = fidelity_row(hw, name, M, N, K, device)
+        row = fidelity_row(hw, name, M, N, K, device, prune=prune)
         rows.append(row)
         if verbose:
             print(f"  [{hw.name}] {name}: fidelity {row.fidelity:.4f} "
@@ -185,22 +209,29 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
                     scale: int = 1,
                     devices: Optional[Dict[str, Device]] = None,
                     out_dir: str = OUT_DIR,
-                    verbose: bool = True) -> Dict:
+                    verbose: bool = True,
+                    prune: bool = False) -> Dict:
     """The paper-style fidelity table: % of exhaustive-oracle performance
     achieved by analytical selection, per preset over the llama3 sweep.
 
     ``devices`` maps preset name -> measuring device; omitted presets get
-    the simulator-backed virtual device (the CI path).  Artifacts:
+    the simulator-backed virtual device (the CI path).  The default is the
+    FULL unpruned sweep — every candidate priced, through the batched
+    simulator pass where the device supports it; ``prune=True`` restores
+    the lower-bound-pruned search (handy on slow wall-clock devices, where
+    the admissible bound skips hopeless candidates).  Artifacts:
     ``fidelity_report.{json,csv,md}`` in ``out_dir``."""
     devices = devices or {}
     shapes = scaled_llama3_shapes(sizes, tokens, scale)
     report: Dict = {"scale": scale, "sizes": list(sizes),
-                    "tokens": list(tokens), "presets": {}, "rows": []}
+                    "tokens": list(tokens), "prune": prune,
+                    "presets": {}, "rows": []}
     t0 = time.perf_counter()
     for preset in presets:
         hw = get_hardware(preset)
         device = devices.get(preset) or VirtualDevice(hw)
-        rows = fidelity_sweep(hw, device, shapes, verbose=verbose)
+        rows = fidelity_sweep(hw, device, shapes, verbose=verbose,
+                              prune=prune)
         fids = [r.fidelity for r in rows]
         report["presets"][preset] = {
             "device": device.name,

@@ -249,6 +249,11 @@ class LatencyBreakdown:
     units: int = 0
     waves: int = 0
     occupancy: float = 1.0
+    # Max-plus overlap pricing (multi-core chains): seconds the output /
+    # epilogue / partial-accumulator flush cursor adds after the overlapped
+    # steady-state loop.  0.0 on single-core chains, where the seed's mean
+    # memory-step model is retained bit-for-bit.
+    flush: float = 0.0
 
     @property
     def efficiency(self) -> float:
@@ -634,6 +639,144 @@ def step_memory_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
 
 
 # ---------------------------------------------------------------------------
+# Max-plus DMA/compute overlap pricing (multi-core steady state).
+#
+# The seed model prices the memory side of a grid step as a per-level MEAN:
+# all traffic a level serves over the whole GEMM, divided by its bandwidth
+# and the step count, with levels pipelining as a max over ports.  That mean
+# hides the phase structure of the fetch stream: under the (m outer,
+# n middle, k inner; m innermost within a group) iteration order, each
+# operand's re-read alternates between a *hit phase* — the reuse window fits
+# a cache, the fetch streams at that cache's bandwidth — and a *miss phase*
+# at backing-memory bandwidth (the first touch of each panel).  Because the
+# grid pipeline double-buffers (the DMA of block i+1 overlaps the compute of
+# block i — the same discipline the event simulator prices), the steady
+# state is the max-plus recurrence
+#
+#     t_i = max(t_{i-1} + compute, dma_done_i)
+#   => step = max(compute_occ, a_step/bw_A + b_step/bw_B + issue_occ)
+#
+# evaluated per *phase pair* (which level serves A x which serves B) and
+# mixed by the phase frequencies — NOT a single mean over the whole loop.
+# The phase classes follow ``_spill_classes``; the reuse windows start from
+# its sequential footprints and add the flush bytes the exact-LRU stack in
+# the event simulator measures between reuses (see the window block in
+# ``overlap_pipeline_arrays``):
+#
+#   A: hit phase on every n-advance, weight (Tn-1)/Tn, window
+#      (g*bm + bn)*K*bi grouped / (bm + bn)*K*bi ungrouped; miss phase
+#      (first column of each row-panel pass) weight 1/Tn at backing.
+#   B: ungrouped — hit on every m-advance, weight (Tm-1)/Tm, window
+#      (bm*K + K*N)*bi; grouped — in-group hit weight (g-1)/g with the
+#      one-tile window, cross-group hit weight (Tm/g-1)/Tm with the
+#      group-sweep window (g*bm*K + K*N)*bi; miss weight 1/Tm at backing.
+#
+# Output writes, epilogue operand reads and the schedule's partial/fixup
+# bytes ride their own flush cursor: they overlap the fetch pipeline (a
+# write posts while the next fetch streams) but their bytes still have to
+# drain through their serving port, so they price as an ADDITIVE term at
+# the serving level's bandwidth instead of inflating every step.
+#
+# Single-core chains (TPU) never enter this path — the selector keeps the
+# seed's mean model bit-for-bit there (goldens pin this).
+# ---------------------------------------------------------------------------
+
+def _serve_bandwidth_arrays(hw: HardwareSpec, win) -> np.ndarray:
+    """Bandwidth serving a re-read with reuse-window footprint ``win``: the
+    nearest cache level whose (scope-scaled) budget covers the window, else
+    backing memory — the array form of ``_serving_cache``.  Accepts scalars
+    or any broadcastable window array."""
+    caches = hw.cache_levels
+    bw = np.full(np.shape(win), float(hw.backing.bandwidth))
+    assigned = np.zeros(np.shape(win), bool)
+    for li in range(len(caches) - 1, -1, -1):          # nearest cache first
+        fit = ~assigned & (win * _window_scale(hw, caches[li])
+                           <= caches[li].budget())
+        bw = np.where(fit, caches[li].bandwidth, bw)
+        assigned |= fit
+    return bw
+
+
+def overlap_pipeline_arrays(p, hw: HardwareSpec, Tm, Tn, bm, bn, gm, steps,
+                            cs_occ, issue_occ, a_traffic, b_traffic,
+                            flush_base, extra):
+    """Price the multi-core steady-state grid loop with the max-plus
+    DMA/compute overlap recurrence (see the block comment above).
+
+    ``p`` supplies ``K``/``N``/``in_dtype`` and may be a scalar
+    :class:`GemmProblem` or a :class:`ShapeBatch` of columns; all other
+    arguments are scalars or mutually broadcastable arrays, so one helper
+    serves the scalar, per-candidate-vector and (S, P)-batched scoring
+    copies with elementwise-identical arithmetic.
+
+    ``cs_occ``   — occupancy-scaled compute side max(mxu, vmem) * occ.
+    ``issue_occ``— occupancy-scaled fixed DMA-issue cost per step.
+    ``a_traffic``/``b_traffic`` — whole-GEMM fetched bytes per operand
+    (revisit-free: nothing persists in staging across cores).
+    ``flush_base`` — compulsory flush bytes (output writes + epilogue
+    operand reads), always served by backing memory.
+    ``extra`` — ``(bytes, window)`` pairs from ``schedule_extra_classes``
+    (or its array form), flushed at their serving level's bandwidth.
+
+    Returns ``(steps_seconds, flush_seconds)``.
+    """
+    bi = DTYPE_BYTES[p.in_dtype]
+    K, N = p.K, p.N
+    Kbi = np.asarray(K * bi, np.float64)
+    KN = np.asarray(K * N, np.float64)
+    g = np.minimum(np.maximum(gm, 1), Tm).astype(np.float64)
+    gle1 = g <= 1
+    ggt1 = ~gle1
+    Tmf = np.asarray(Tm, np.float64)
+    Tnf = np.asarray(Tn, np.float64)
+
+    # Phase windows: ``_spill_classes``'s sequential-reuse footprints PLUS
+    # the bytes the event simulator's exact LRU stack actually measures
+    # between reuses and the seed windows omit — the output/epilogue flush
+    # of every tile retired inside the window (``record_use("wb", ...)``
+    # keys circulate through the same stack as the panels) and, for the
+    # cross-row/cross-band B windows, the NEXT row's A panels (touched
+    # before the B panel comes back around).  On the H100-like preset the
+    # L2 budget sits inside the gap: a (bm=256, bn=128) sweep measures
+    # ~41 MB between B reuses (spills) where the seed window said 35 MB
+    # (fits), while (bm=128, bn=256) measures ~35 MB and genuinely fits —
+    # the flush-blind windows priced both as hits and flipped the argmin.
+    bo = DTYPE_BYTES[p.out_dtype]
+    ep = p.epilogue
+    wbe = float(bo + ep.n_mn_operands * bi)  # flush bytes per output element
+    bias_bi = float(int(ep.bias) * bi)
+    wb_tile = bm * bn * wbe + bn * bias_bi   # one tile's flush footprint
+    wb_row = bm * N * wbe + N * bias_bi      # a full row-sweep (Tn tiles)
+    win_a = np.where(ggt1,
+                     (g * bm + bn) * Kbi + g * wb_tile,
+                     (bm + bn) * Kbi + wb_tile)
+    win_b1 = np.where(gle1,
+                      (2.0 * bm * K + K * N) * float(bi) + wb_row,
+                      (bm + bn) * Kbi + wb_tile)
+    win_b2 = (2.0 * g * bm * K + KN) * bi + g * wb_row
+    back_bw = float(hw.backing.bandwidth)
+    # (weight, serving bandwidth) per phase; weights sum to 1 per operand.
+    a_phases = (((Tnf - 1.0) / Tnf, _serve_bandwidth_arrays(hw, win_a)),
+                (1.0 / Tnf, back_bw))
+    b_phases = ((np.where(gle1, (Tmf - 1.0) / Tmf, (g - 1.0) / g),
+                 _serve_bandwidth_arrays(hw, win_b1)),
+                (np.where(gle1, 0.0, (Tmf / g - 1.0) / Tmf),
+                 _serve_bandwidth_arrays(hw, win_b2)),
+                (1.0 / Tmf, back_bw))
+    a_ps = a_traffic / steps
+    b_ps = b_traffic / steps
+    body = 0.0
+    for wa, bw_a in a_phases:
+        for wb, bw_b in b_phases:
+            body = body + wa * wb * np.maximum(
+                cs_occ, a_ps / bw_a + b_ps / bw_b + issue_occ)
+    flush = flush_base / back_bw
+    for bytes_, win in extra:
+        flush = flush + bytes_ / _serve_bandwidth_arrays(hw, win)
+    return steps * body, flush
+
+
+# ---------------------------------------------------------------------------
 # Alg. 8 + 9 — pipeline + total latency (continuous grid pipeline).
 # ---------------------------------------------------------------------------
 
@@ -663,7 +806,25 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
     epilogue = hw.hbm_latency + t.bm * t.bn * bo / hw.hbm_bandwidth
     fill_drain = hw.kernel_launch + prologue + epilogue
 
-    total = fill_drain + steps * l_iter
+    # Steady state: single-core chains keep the seed's mean memory-step
+    # model bit-for-bit; multi-core chains price the loop with the max-plus
+    # DMA/compute overlap recurrence plus the flush cursor.
+    if hw.total_cores() > 1:
+        epl = p.epilogue
+        a_tr = p.batch * (Tn * (p.M * p.K) * bi)
+        b_tr = p.batch * (Tm * (p.K * p.N) * bi)
+        flush_base = p.batch * (p.M * p.N * bo
+                                + (epl.n_mn_operands * p.M * p.N
+                                   + (p.N if epl.bias else 0)) * bi)
+        body, flush_s = overlap_pipeline_arrays(
+            p, hw, Tm, Tn, t.bm, t.bn, t.group_m, float(steps),
+            compute_side, issue_s * occ, a_tr, b_tr, flush_base,
+            schedule_extra_classes(p, t, hw, grid))
+        flush_s = float(flush_s)
+        total = fill_drain + float(body) + flush_s
+    else:
+        flush_s = 0.0
+        total = fill_drain + steps * l_iter
 
     mm, mn, mk = hw.mxu_shape
     padded_flops = (2.0 * p.batch
@@ -699,6 +860,7 @@ def gemm_latency(p: GemmProblem, t: TileConfig, hw: HardwareSpec
         units=units,
         waves=waves,
         occupancy=units / (waves * hw.total_cores()),
+        flush=flush_s,
     )
 
 
@@ -866,7 +1028,22 @@ def gemm_latency_batch(problems: Sequence[GemmProblem],
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilog = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     fill_drain = hw.kernel_launch + prologue + epilog
-    total = fill_drain + steps * l_iter
+    if C > 1:
+        # Max-plus overlap steady state + flush cursor (mirrors the scalar
+        # ``gemm_latency`` branch op for op — hex parity is pinned).
+        pb_view = ShapeBatch(M=M, N=N, K=K, batch=B, in_dtype=p0.in_dtype,
+                             out_dtype=p0.out_dtype, epilogue=ep)
+        a_tr = B * (Tn * (M * K) * bi)
+        b_tr = B * (Tm * (K * N) * bi)
+        flush_base = B * (c_b + e_b)
+        body, flush_a = overlap_pipeline_arrays(
+            pb_view, hw, Tm, Tn, bm, bn, gm_, steps, compute_side,
+            issue_s * occ, a_tr, b_tr, flush_base, extra)
+        total = fill_drain + body + flush_a
+        flush_l = np.broadcast_to(flush_a, (S,)).tolist()
+    else:
+        total = fill_drain + steps * l_iter
+        flush_l = [0.0] * S
     padded_flops = (2.0 * B
                     * (-(-M // bm) * bm) * (-(-N // bn) * bn)
                     * (-(-(-(-K // sk)) // bk) * bk) * sk)
@@ -914,6 +1091,7 @@ def gemm_latency_batch(problems: Sequence[GemmProblem],
             units=units_l[i],
             waves=waves_l[i],
             occupancy=occup_l[i],
+            flush=flush_l[i],
         ))
     return out
 
@@ -965,6 +1143,18 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
     extra = schedule_extra_classes(p, t, hw)
+    _, _, occ = wave_model(p, t, hw)
+    prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
+    epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
+    if hw.total_cores() > 1:
+        # Max-plus overlap steady state + flush cursor (multi-core chains).
+        body, flush = overlap_pipeline_arrays(
+            p, hw, Tm, Tn, bm, bn, t.group_m, float(steps),
+            max(mxu_s, vmem_s) * occ, hw.dma_fixed * occ,
+            p.batch * a_bytes, p.batch * b_bytes,
+            p.batch * (c_bytes + e_bytes), extra)
+        return (hw.kernel_launch + prologue + epilogue
+                + float(body) + float(flush))
     if hw.cache_levels:
         # reuse/footprint recurrence: cache-served re-reads leave HBM.
         absorbed: Dict[str, float] = {}
@@ -990,10 +1180,7 @@ def score_candidate(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> float:
     else:
         traffic += sum(b for b, _ in extra)
         mem_s = traffic / hw.hbm_bandwidth / steps
-    _, _, occ = wave_model(p, t, hw)
     l_iter = max(max(mxu_s, vmem_s) * occ, mem_s + hw.dma_fixed * occ)
-    prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
-    epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
     return hw.kernel_launch + prologue + epilogue + steps * l_iter
 
 
@@ -1195,13 +1382,22 @@ def score_candidate_arrays(p: GemmProblem, bm: np.ndarray, bn: np.ndarray,
     e_bytes = (n_mn * p.M * p.N + has_bias * p.N) * bi
     traffic = p.batch * (a_bytes + b_bytes + c_bytes + e_bytes)
 
-    mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
-                                       bm, bn, gm, steps, sk=sk, sched=sched)
     occ = occupancy_arrays(p, hw, Tm, Tn, sk, sched, steps_i)
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
-                        mem_s + hw.dma_fixed * occ)
     prologue = hw.hbm_latency + (bm * bk + bk * bn) * bi / hw.hbm_bandwidth
     epilogue = hw.hbm_latency + bm * bn * bo / hw.hbm_bandwidth
+    if hw.total_cores() > 1:
+        # Max-plus overlap steady state + flush cursor (multi-core chains).
+        extra = _schedule_extra_arrays(p, hw, Tm, Tn, Tk, bm, bn, sk, sched)
+        body, flush = overlap_pipeline_arrays(
+            p, hw, Tm, Tn, bm, bn, gm, steps,
+            np.maximum(mxu_s, vmem_s) * occ, hw.dma_fixed * occ,
+            p.batch * a_bytes, p.batch * b_bytes,
+            p.batch * (c_bytes + e_bytes), extra)
+        return hw.kernel_launch + prologue + epilogue + body + flush
+    mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
+                                       bm, bn, gm, steps, sk=sk, sched=sched)
+    l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
+                        mem_s + hw.dma_fixed * occ)
     return hw.kernel_launch + prologue + epilogue + steps * l_iter
 
 

@@ -36,6 +36,7 @@ from repro.core.latency import (
     LatencyBreakdown,
     ShapeBatch,
     TileConfig,
+    _schedule_extra_arrays,
     cdiv,
     fits_placement,
     gemm_latency,
@@ -43,6 +44,7 @@ from repro.core.latency import (
     grid_shape,
     memory_step_seconds_arrays,
     occupancy_arrays,
+    overlap_pipeline_arrays,
     round_up,
     score_candidate,
     score_candidates,
@@ -352,12 +354,22 @@ def select_fast(p: GemmProblem, hw: HardwareSpec, *,
     b_bytes = Tm * float(p.K * p.N * bi) * (1.0 - b_skip)
     traffic = p.batch * (a_bytes + b_bytes + ce_bytes)
 
-    mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
-                                       bm, bn, gm, steps, sk=sk, sched=sched)
     occ = occupancy_arrays(p, hw, Tm, Tn, sk, sched, steps)
-    l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
-                        mem_s + hw.dma_fixed * occ)
-    scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
+    if hw.total_cores() > 1:
+        # Max-plus overlap steady state + flush cursor (multi-core chains).
+        extra = _schedule_extra_arrays(p, hw, Tm, Tn, Tk, bm, bn, sk, sched)
+        body, flush = overlap_pipeline_arrays(
+            p, hw, Tm, Tn, bm, bn, gm, steps,
+            np.maximum(mxu_s, vmem_s) * occ, hw.dma_fixed * occ,
+            p.batch * a_bytes, p.batch * b_bytes, p.batch * ce_bytes, extra)
+        scores = np.where(keep, fill_drain + body + flush, np.inf)
+    else:
+        mem_s = memory_step_seconds_arrays(p, hw, traffic, Tm, Tn, Tk,
+                                           bm, bn, gm, steps,
+                                           sk=sk, sched=sched)
+        l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
+                            mem_s + hw.dma_fixed * occ)
+        scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
     idx = np.flatnonzero(scores <= scores.min() + 1e-15)
     i = int(idx[np.argmax(vols[idx])])
     return TileConfig(bm=int(bm[i]), bn=int(bn[i]), bk=int(bk[i]),
@@ -590,16 +602,22 @@ def select_fast_batch(problems: Sequence[GemmProblem], hw: HardwareSpec, *,
         b_bytes = Tm * KNbi
     traffic = batch * (a_bytes + b_bytes + ce_bytes)
 
-    mem_s = memory_step_seconds_arrays(pb, hw, traffic, Tm, Tn, Tk,
-                                       bm, bn, gm, steps, sk=sk, sched=sched)
     occ = occupancy_arrays(pb, hw, Tm, Tn, sk, sched, steps)
     if isinstance(occ, float):              # single-core chains: occ == 1.0
+        mem_s = memory_step_seconds_arrays(pb, hw, traffic, Tm, Tn, Tk,
+                                           bm, bn, gm, steps,
+                                           sk=sk, sched=sched)
         l_iter = np.maximum(np.maximum(mxu_s, vmem_s),
                             mem_s + hw.dma_fixed)
+        scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
     else:
-        l_iter = np.maximum(np.maximum(mxu_s, vmem_s) * occ,
-                            mem_s + hw.dma_fixed * occ)
-    scores = np.where(keep, fill_drain + steps * l_iter, np.inf)
+        # Max-plus overlap steady state + flush cursor (multi-core chains).
+        extra = _schedule_extra_arrays(pb, hw, Tm, Tn, Tk, bm, bn, sk, sched)
+        body, flush = overlap_pipeline_arrays(
+            pb, hw, Tm, Tn, bm, bn, gm, steps,
+            np.maximum(mxu_s, vmem_s) * occ, hw.dma_fixed * occ,
+            batch * a_bytes, batch * b_bytes, batch * ce_bytes, extra)
+        scores = np.where(keep, fill_drain + body + flush, np.inf)
     # Per-row argmin + volume tie-break: argmax returns the FIRST max, which
     # is exactly the scalar path's earliest-in-enumeration-order policy.
     smin = scores.min(axis=1, keepdims=True)
@@ -778,11 +796,17 @@ def emit_fallback(sel: "Selection", rung: str) -> None:
 
 
 def load_selection_cache(path: Optional[str] = None) -> int:
-    """Load (or re-load) the persistent selection table.  ``path`` defaults
-    to ``$REPRO_SELECTION_CACHE``; with neither set this is a no-op.
-    Returns the number of entries available for warm-starting."""
+    """Load (or re-load) the persistent selection table.  ``path`` resolves
+    exactly like ``save_selection_cache``'s: the explicit argument, else the
+    path of the last programmatic load, else ``$REPRO_SELECTION_CACHE``.
+    (A bare re-load after ``load_selection_cache("/x.json")`` used to
+    silently DEACTIVATE persistence when the env var was unset — even
+    though save still honored the remembered path.)  With none of the
+    three set, persistence deactivates; use ``unload_selection_cache`` to
+    deactivate explicitly.  Returns the number of entries available for
+    warm-starting."""
     global _disk_table, _disk_path
-    path = path or os.environ.get(_DISK_ENV)
+    path = path or _disk_path or os.environ.get(_DISK_ENV)
     if not path:
         _disk_table, _disk_path = None, None
         return 0
@@ -793,6 +817,15 @@ def load_selection_cache(path: Optional[str] = None) -> int:
         table = {}
     _disk_table, _disk_path = table, path
     return len(table)
+
+
+def unload_selection_cache() -> None:
+    """Deactivate disk persistence: drop the in-memory disk table AND the
+    remembered path.  (Since ``load_selection_cache`` resolves a bare call
+    through the remembered path, this is the explicit off switch tests and
+    benchmarks need after unsetting ``$REPRO_SELECTION_CACHE``.)"""
+    global _disk_table, _disk_path
+    _disk_table, _disk_path = None, None
 
 
 def save_selection_cache(path: Optional[str] = None) -> Optional[str]:

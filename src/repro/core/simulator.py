@@ -53,7 +53,10 @@ benchmarks tractable on CPU.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Mapping, Optional, Tuple
+from itertools import chain
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.latency import GemmProblem, TileConfig, cdiv
@@ -353,6 +356,26 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
                      units=units, waves=units, cores=1)
 
 
+@dataclass
+class _PlacedGrid:
+    """Pass-1 (placement) record for one candidate on a multi-core chain:
+    the priced-event streams plus every counter the pricing convention
+    leaves untouched (``tests/test_wave_model.py`` pins the counters).
+    Fetch spans carry level INDICES into ``hw.levels`` so the batched
+    pricer can stack candidates into flat numpy columns."""
+
+    ct: float                    # per-core full-block step compute seconds
+    fetch_events: List[Tuple]    # (core, wave, n_empty, nfull, fa_full,
+                                 #  fb_full, fa_rag, fb_rag, ia, ib)
+    write_events: List[Tuple]    # (core, wave, bytes, level index)
+    level_bytes: Dict[str, float]
+    total_bytes: float
+    mxu_busy: float
+    n_steps: int
+    units: int
+    waves: int
+
+
 def _simulate_multicore(p: GemmProblem, t: TileConfig,
                         hw: HardwareSpec) -> SimResult:
     """Round-robin multi-core scheduler over the chip's cores.
@@ -394,6 +417,14 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     pricing convention — ``tests/test_wave_model.py`` pins them); the
     second pass prices every recorded event with its wave's populations.
     """
+    return _price_multicore(_place_multicore(p, t, hw), hw)
+
+
+def _place_multicore(p: GemmProblem, t: TileConfig,
+                     hw: HardwareSpec) -> _PlacedGrid:
+    """Pass 1: deterministic-clock placement — serving levels from the LRU
+    stacks, byte/step/wave counters, and the priced-event record (see
+    :func:`_simulate_multicore` for the conventions)."""
     bi = DTYPE_BYTES[p.in_dtype]
     bo = DTYPE_BYTES[p.out_dtype]
     mm, mn, mk = hw.mxu_shape
@@ -423,6 +454,12 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     # and the closed-form model's unique-byte windows, keep resident.)
     chip_lru = _LruStack()
     part_lru = [_LruStack() for _ in range(hw.partitions)]
+    # A scope's stack is only ever read by a cache level OF that scope —
+    # skip maintaining clocks no level will consult (the Fenwick updates
+    # are the placement pass's hottest loop; H100-like chains have no
+    # partition-scoped cache, halving their LRU cost).
+    need_chip = any(lvl.scope != "partition" for lvl in caches)
+    need_part = any(lvl.scope == "partition" for lvl in caches)
 
     def serving_level(kind, key, part) -> MemoryLevel:
         """Measured-reuse-distance placement: nearest cache whose budget
@@ -445,8 +482,10 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         return backing
 
     def record_use(kind, key, part, bytes_) -> None:
-        chip_lru.use((kind, key), bytes_)
-        part_lru[part].use((kind, key), bytes_)
+        if need_chip:
+            chip_lru.use((kind, key), bytes_)
+        if need_part:
+            part_lru[part].use((kind, key), bytes_)
 
     def fixup_level() -> MemoryLevel:
         """Serving level for block partials (combine / stream-K fixup):
@@ -460,19 +499,21 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
                 return lvl
         return backing
 
-    core_time = [0.0] * C
     total_bytes = 0.0
     mxu_busy = 0.0
     n_steps = 0
     block_acc = t.bm * t.bn * ACC_BYTES
+    idx_of = {lvl.name: i for i, lvl in enumerate(hw.levels)}
     fix_lvl = fixup_level()
+    fix_i = idx_of[fix_lvl.name]
+    back_i = idx_of[backing.name]
     ep = p.epilogue
 
     # Pass-1 event records.  Fetch spans:
     #   (core, wave, n_empty, nfull, fa_full, fb_full, fa_rag, fb_rag,
-    #    lvl_a, lvl_b)
+    #    ia, ib)   [serving-level indices into hw.levels]
     # writes (partials / combines / output flushes):
-    #   (core, wave, bytes, level)
+    #   (core, wave, bytes, level index)
     fetch_events: List[Tuple] = []
     write_events: List[Tuple] = []
 
@@ -501,7 +542,8 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         fetch_events.append(
             (core, wave, n_empty, nfull,
              em * t.bk * bi, t.bk * en * bi,
-             em * ragged * bi, ragged * en * bi, lvl_a, lvl_b))
+             em * ragged * bi, ragged * en * bi,
+             idx_of[lvl_a.name], idx_of[lvl_b.name]))
         level_bytes[lvl_a.name] += a_total
         level_bytes[lvl_b.name] += b_total
         total_bytes += a_total + b_total
@@ -521,7 +563,7 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
         total_bytes += wb
         part = core // hw.core_count
         record_use("wb", (e, i, j), part, wb)
-        write_events.append((core, wave, wb, backing))
+        write_events.append((core, wave, wb, back_i))
 
     tiles = [(e, i, j) for e in range(p.batch)
              for (i, j) in _tile_order(Tm, Tn, t.group_m)]
@@ -542,7 +584,7 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
                 fix = 2.0 * block_acc
                 level_bytes[fix_lvl.name] += fix
                 total_bytes += fix
-                write_events.append((core, 0, fix, fix_lvl))
+                write_events.append((core, 0, fix, fix_i))
             while st < hi:
                 ti, off = divmod(st, steps_per_tile)
                 e, i, j = tiles[ti]
@@ -565,50 +607,174 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
                 # shard writes its block partial; last shard combines.
                 level_bytes[fix_lvl.name] += block_acc
                 total_bytes += block_acc
-                write_events.append((core, wave, block_acc, fix_lvl))
+                write_events.append((core, wave, block_acc, fix_i))
                 if s == t.split_k - 1:
                     rd = t.split_k * block_acc
                     level_bytes[fix_lvl.name] += rd
                     total_bytes += rd
-                    write_events.append((core, wave, rd, fix_lvl))
+                    write_events.append((core, wave, rd, fix_i))
                     writeback_place(e, i, j, core, wave)
             else:
                 writeback_place(e, i, j, core, wave)
         waves = cdiv(units, C)
 
-    # Pass 2 — fetch-stream populations per (wave, level): the cores of a
-    # wave that fetch from a level share its port; everyone else does not
-    # occupy it.  Writes/partials are priced at their wave's population
-    # (min 1 — a lone writer gets the full port).
-    pop: Dict[Tuple[int, str], set] = {}
-    for (core, wave, _, _, _, _, _, _, lvl_a, lvl_b) in fetch_events:
-        pop.setdefault((wave, lvl_a.name), set()).add(core)
-        pop.setdefault((wave, lvl_b.name), set()).add(core)
+    return _PlacedGrid(ct=ct, fetch_events=fetch_events,
+                       write_events=write_events, level_bytes=level_bytes,
+                       total_bytes=total_bytes, mxu_busy=mxu_busy,
+                       n_steps=n_steps, units=units, waves=waves)
+
+
+def _price_multicore(g: _PlacedGrid, hw: HardwareSpec) -> SimResult:
+    """Pass 2 — fetch-stream populations per (wave, level): the cores of a
+    wave that fetch from a level share its port; everyone else does not
+    occupy it.  Writes/partials are priced at their wave's population
+    (min 1 — a lone writer gets the full port)."""
+    C = hw.total_cores()
+    bw = [lvl.bandwidth for lvl in hw.levels]
+    ct = g.ct
+    core_time = [0.0] * C
+
+    pop: Dict[Tuple[int, int], set] = {}
+    for (core, wave, _, _, _, _, _, _, ia, ib) in g.fetch_events:
+        pop.setdefault((wave, ia), set()).add(core)
+        pop.setdefault((wave, ib), set()).add(core)
     n_pop = {k: len(v) for k, v in pop.items()}
 
     for (core, wave, n_empty, nfull, fa, fb, fa_r, fb_r,
-         lvl_a, lvl_b) in fetch_events:
-        na = n_pop[(wave, lvl_a.name)]
-        nb = n_pop[(wave, lvl_b.name)]
+         ia, ib) in g.fetch_events:
+        na = n_pop[(wave, ia)]
+        nb = n_pop[(wave, ib)]
         secs = n_empty * ct
         if nfull:
-            secs += nfull * max(ct, (fa * na / lvl_a.bandwidth
-                                     + fb * nb / lvl_b.bandwidth)
+            secs += nfull * max(ct, (fa * na / bw[ia]
+                                     + fb * nb / bw[ib])
                                 + hw.dma_fixed)
         if fa_r or fb_r:
-            secs += max(ct, (fa_r * na / lvl_a.bandwidth
-                             + fb_r * nb / lvl_b.bandwidth) + hw.dma_fixed)
+            secs += max(ct, (fa_r * na / bw[ia]
+                             + fb_r * nb / bw[ib]) + hw.dma_fixed)
         core_time[core] += secs
-    for (core, wave, bytes_, lvl) in write_events:
-        n = n_pop.get((wave, lvl.name), 1)
-        core_time[core] += bytes_ * n / lvl.bandwidth
+    for (core, wave, bytes_, il) in g.write_events:
+        n = n_pop.get((wave, il), 1)
+        core_time[core] += bytes_ * n / bw[il]
 
     launch = hw.kernel_launch + hw.hbm_latency
     end = launch + max(core_time)
-    return SimResult(time=end, hbm_bytes=total_bytes,
-                     mxu_busy=mxu_busy, steps=n_steps,
-                     level_bytes=level_bytes,
-                     units=units, waves=waves, cores=C)
+    return SimResult(time=end, hbm_bytes=g.total_bytes,
+                     mxu_busy=g.mxu_busy, steps=g.n_steps,
+                     level_bytes=g.level_bytes,
+                     units=g.units, waves=g.waves, cores=C)
+
+
+def _price_multicore_batch(grids: Sequence[_PlacedGrid],
+                           hw: HardwareSpec) -> List[SimResult]:
+    """Pass 2 across the candidate axis: :func:`_price_multicore` with the
+    per-event Python loops replaced by flat numpy columns over ALL
+    candidates' events at once.
+
+    Bit-identity with the scalar pricer is by construction, not tolerance
+    (``tests/test_simulator_batch.py`` hex-compares every field):
+
+    * populations are distinct-core counts per (candidate, wave, level)
+      key — integer set cardinalities, computed exactly by ``np.unique``;
+    * each event's seconds evaluate the same IEEE-754 float64 operations
+      in the same association order as the scalar expressions (numpy
+      elementwise ops are the same C doubles);
+    * per-(candidate, core) times accumulate through ONE ``np.bincount``
+      over the concatenated [fetch spans, then writes] stream — bincount
+      adds weights in input order, reproducing the scalar loops'
+      fetch-then-write accumulation order bin by bin.
+    """
+    C = hw.total_cores()
+    L = len(hw.levels)
+    n_grids = len(grids)
+    bw = np.array([lvl.bandwidth for lvl in hw.levels])
+    ct = np.array([g.ct for g in grids])
+    launch = hw.kernel_launch + hw.hbm_latency
+
+    fe = np.fromiter(
+        chain.from_iterable(chain.from_iterable(
+            g.fetch_events for g in grids)),
+        dtype=np.float64).reshape(-1, 10)
+    f_cand = np.repeat(np.arange(n_grids, dtype=np.int64),
+                       [len(g.fetch_events) for g in grids])
+    f_core = fe[:, 0].astype(np.int64)
+    f_wave = fe[:, 1].astype(np.int64)
+    n_empty, nfull = fe[:, 2], fe[:, 3]
+    fa, fb, fa_r, fb_r = fe[:, 4], fe[:, 5], fe[:, 6], fe[:, 7]
+    ia = fe[:, 8].astype(np.int64)
+    ib = fe[:, 9].astype(np.int64)
+
+    we = np.fromiter(
+        chain.from_iterable(chain.from_iterable(
+            g.write_events for g in grids)),
+        dtype=np.float64).reshape(-1, 4)
+    w_cand = np.repeat(np.arange(n_grids, dtype=np.int64),
+                       [len(g.write_events) for g in grids])
+    w_core = we[:, 0].astype(np.int64)
+    w_wave = we[:, 1].astype(np.int64)
+    w_bytes = we[:, 2]
+    w_il = we[:, 3].astype(np.int64)
+
+    # Populations: distinct cores per (candidate, wave, level) over the A
+    # and B fetch streams.  Keys are packed into one int64 (W bounds every
+    # wave index, fetch and write alike, so write-side lookups share the
+    # encoding).
+    W = 1 + max(int(f_wave.max(initial=-1)), int(w_wave.max(initial=-1)))
+    ka = (f_cand * W + f_wave) * L + ia
+    kb = (f_cand * W + f_wave) * L + ib
+    upairs = np.unique(np.concatenate([ka, kb]) * C
+                       + np.concatenate([f_core, f_core]))
+    uk, cnt = np.unique(upairs // C, return_counts=True)
+    na = cnt[np.searchsorted(uk, ka)]
+    nb = cnt[np.searchsorted(uk, kb)]
+
+    ctf = ct[f_cand]
+    secs = n_empty * ctf
+    full = nfull * np.maximum(ctf, (fa * na / bw[ia]
+                                    + fb * nb / bw[ib])
+                              + hw.dma_fixed)
+    secs = secs + np.where(nfull > 0, full, 0.0)
+    rag = np.maximum(ctf, (fa_r * na / bw[ia]
+                           + fb_r * nb / bw[ib]) + hw.dma_fixed)
+    secs = secs + np.where((fa_r > 0) | (fb_r > 0), rag, 0.0)
+
+    # Writes price at their wave's fetch population, default 1.
+    kw = (w_cand * W + w_wave) * L + w_il
+    pos = np.minimum(np.searchsorted(uk, kw), max(len(uk) - 1, 0))
+    wn = np.where(uk[pos] == kw, cnt[pos], 1) if len(uk) else \
+        np.ones(len(kw), dtype=np.int64)
+    w_secs = w_bytes * wn / bw[w_il]
+
+    core_time = np.bincount(
+        np.concatenate([f_cand * C + f_core, w_cand * C + w_core]),
+        weights=np.concatenate([secs, w_secs]),
+        minlength=n_grids * C)
+    end = launch + core_time.reshape(n_grids, C).max(axis=1)
+
+    return [SimResult(time=float(end[i]), hbm_bytes=g.total_bytes,
+                      mxu_busy=g.mxu_busy, steps=g.n_steps,
+                      level_bytes=g.level_bytes,
+                      units=g.units, waves=g.waves, cores=C)
+            for i, g in enumerate(grids)]
+
+
+def simulate_gemm_batch(p: GemmProblem, candidates: Sequence[TileConfig],
+                        hw: HardwareSpec) -> List[SimResult]:
+    """Simulate every candidate of one problem, batching the pricing pass
+    (populations + per-core byte clocks) across the candidate axis.
+
+    Bit-identical to ``[simulate_gemm(p, t, hw) for t in candidates]`` —
+    placement (pass 1) is the same per-candidate code path as the scalar
+    simulator; only pricing (pass 2) is stacked, and
+    :func:`_price_multicore_batch` documents why that stacking is exact.
+    The exhaustive-autotune oracle uses this to price a FULL candidate
+    menu per shape without the compute-lower-bound pruning."""
+    if hw.total_cores() == 1:
+        return [_simulate_single_core(p, t, hw) for t in candidates]
+    if not candidates:
+        return []
+    return _price_multicore_batch(
+        [_place_multicore(p, t, hw) for t in candidates], hw)
 
 
 # ---------------------------------------------------------------------------
@@ -649,9 +815,17 @@ def simulate_stream(hw: HardwareSpec, nbytes: float, window: int,
             + n_chunks * hw.dma_fixed)
 
 
-def simulate_compute(hw: HardwareSpec, dtype: str, n_atoms: int) -> float:
+def simulate_compute(hw: HardwareSpec, dtype: Optional[str],
+                     n_atoms: int) -> float:
     """Seconds for ``n_atoms`` back-to-back MXU macro-atoms on resident
-    operands (the issue-rate microbenchmark: no memory traffic)."""
+    operands (the issue-rate microbenchmark: no memory traffic).
+
+    ``dtype`` falls back to the shared :func:`reference_dtype` rule — the
+    same default its sibling :func:`simulate_wave` applies — so
+    calibration probes run on bf16-less topologies instead of raising
+    ``KeyError``."""
+    if dtype is None:
+        dtype = reference_dtype(hw.peak_flops)
     mm, mn, mk = hw.mxu_shape
     return hw.kernel_launch + n_atoms * (2.0 * mm * mn * mk) / hw.flops(dtype)
 
@@ -679,10 +853,21 @@ def simulate_wave(hw: HardwareSpec, n_units: int, unit_atoms: int,
 
 def exhaustive_best(p: GemmProblem, hw: HardwareSpec,
                     candidates) -> Tuple[TileConfig, SimResult]:
-    """The autotuner stand-in: simulate every candidate, return the argmin."""
+    """The autotuner stand-in: simulate every candidate, return the argmin.
+
+    An empty menu is a caller bug (a menu filter over-pruned, or a shape
+    defeated every placement constraint) — raise a ``ValueError`` naming
+    the problem shape instead of returning ``(None, None)`` and crashing
+    the caller with an opaque unpack/attribute error downstream.  Ties
+    keep the first candidate in menu order, matching the scalar loop this
+    replaced."""
+    candidates = list(candidates)
+    if not candidates:
+        raise ValueError(
+            f"exhaustive_best: empty candidate list for GEMM "
+            f"M={p.M} N={p.N} K={p.K} batch={p.batch} on {hw.name}")
     best_t, best_r = None, None
-    for t in candidates:
-        r = simulate_gemm(p, t, hw)
+    for t, r in zip(candidates, simulate_gemm_batch(p, candidates, hw)):
         if best_r is None or r.time < best_r.time:
             best_t, best_r = t, r
     return best_t, best_r

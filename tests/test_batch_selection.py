@@ -16,7 +16,8 @@ from repro.core import (Epilogue, GemmProblem, clear_selection_cache,
 from repro.core.latency import TileConfig, gemm_latency_batch
 from repro.core.selector import (add_selection_hook, load_selection_cache,
                                  remove_selection_hook,
-                                 select_gemm_config_batch)
+                                 select_gemm_config_batch,
+                                 unload_selection_cache)
 
 PRESETS = ["tpu_v5e", "tpu_v5p", "tpu_v4", "gpu_mi300x_like",
            "gpu_h100_like"]
@@ -110,7 +111,7 @@ def test_source_disk_roundtrip(tmp_path, monkeypatch):
             assert a.predicted.total.hex() == b.predicted.total.hex()
     finally:
         monkeypatch.delenv("REPRO_SELECTION_CACHE")
-        load_selection_cache()
+        unload_selection_cache()
         clear_selection_cache()
 
 
@@ -131,7 +132,7 @@ def test_bulk_flush_is_one_write(tmp_path, monkeypatch):
     finally:
         monkeypatch.setattr(selmod, "save_selection_cache", real)
         monkeypatch.delenv("REPRO_SELECTION_CACHE")
-        load_selection_cache()
+        unload_selection_cache()
         clear_selection_cache()
 
 

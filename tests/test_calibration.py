@@ -24,7 +24,7 @@ from repro.core import (GPU_MI300X_LIKE, TPU_V5E, GemmProblem, TileConfig,
                         clear_selection_cache, load_calibrated_topology,
                         load_selection_cache, remove_selection_hook,
                         select_gemm_config, simulate_gemm, simulate_stream,
-                        topology_fingerprint)
+                        topology_fingerprint, unload_selection_cache)
 
 # Documented fit tolerances under 2% multiplicative measurement noise.
 # Slopes (bandwidths, peak rates) are robust; intercept-derived overheads
@@ -225,7 +225,7 @@ def cache_path(tmp_path, monkeypatch):
     clear_selection_cache()
     yield path
     monkeypatch.delenv("REPRO_SELECTION_CACHE")
-    load_selection_cache()
+    unload_selection_cache()
     clear_selection_cache()
 
 

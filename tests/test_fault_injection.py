@@ -37,7 +37,8 @@ from repro.core import (PRESETS, TPU_V5E, DegradedModeWarning, GemmProblem,
                         candidate_tiles, clear_selection_cache, fits_placement,
                         get_hardware, load_calibrated_topology_guarded,
                         load_selection_cache, remove_selection_hook,
-                        safe_config, select_gemm_config, validate_selection)
+                        safe_config, select_gemm_config,
+                        unload_selection_cache, validate_selection)
 from repro.core.selector import fallback_ladder, rank_candidates
 from repro.kernels import ops
 
@@ -274,7 +275,7 @@ def cache_path(tmp_path, monkeypatch):
     clear_selection_cache()
     yield path
     monkeypatch.delenv("REPRO_SELECTION_CACHE")
-    load_selection_cache()
+    unload_selection_cache()
     clear_selection_cache()
 
 

@@ -17,7 +17,8 @@ import pytest
 import repro.core.selector as selmod
 from repro.core import (GPU_MI300X_LIKE, TPU_V5E, clear_selection_cache,
                         select_gemm_config)
-from repro.core.selector import load_selection_cache, save_selection_cache
+from repro.core.selector import (load_selection_cache, save_selection_cache,
+                                 unload_selection_cache)
 
 
 @pytest.fixture
@@ -29,7 +30,7 @@ def cache_path(tmp_path, monkeypatch):
     clear_selection_cache()
     yield path
     monkeypatch.delenv("REPRO_SELECTION_CACHE")
-    load_selection_cache()
+    unload_selection_cache()
     clear_selection_cache()
 
 
@@ -196,3 +197,32 @@ def test_bulk_flush_merges_with_concurrent_writer(cache_path):
     merged = json.load(open(cache_path))
     assert set(a_table) < set(merged)                 # A's entry survived
     assert len(merged) == 1 + len(shapes)
+
+
+def test_reload_after_programmatic_load_keeps_path(tmp_path, monkeypatch):
+    """Regression: with $REPRO_SELECTION_CACHE unset, a bare
+    ``load_selection_cache()`` after a programmatic
+    ``load_selection_cache(path)`` must RE-LOAD from the remembered path —
+    it used to resolve only the env var and silently deactivate
+    persistence, even though ``save_selection_cache`` still honored the
+    remembered path (load and save now share one resolution order:
+    explicit path, then remembered path, then env)."""
+    monkeypatch.delenv("REPRO_SELECTION_CACHE", raising=False)
+    path = str(tmp_path / "selections.json")
+    try:
+        load_selection_cache(path)                     # programmatic load
+        clear_selection_cache()
+        select_gemm_config(1536, 1536, 1536)
+        assert len(json.load(open(path))) == 1         # save honored path
+        clear_selection_cache()
+        selmod._disk_table = None                      # drop table only
+        assert load_selection_cache() == 1             # bare re-load works
+        assert selmod._disk_path == path
+        # the explicit off switch is unload: afterwards a bare load with no
+        # env var is a no-op deactivation again.
+        unload_selection_cache()
+        assert load_selection_cache() == 0
+        assert selmod._disk_path is None
+    finally:
+        unload_selection_cache()
+        clear_selection_cache()

@@ -1,0 +1,136 @@
+"""Batched event simulator (``simulate_gemm_batch``) is a COST
+optimization, not a semantic one: every per-candidate ``SimResult`` must be
+bit-identical to a scalar ``simulate_gemm`` call — every float down to the
+bit pattern (``float.hex``), every counter, every per-level byte split —
+mirroring the batched-selection bit-identity methodology of
+``tests/test_batch_selection.py``.  Covers all five presets x schedules
+(``data_parallel``, ``stream_k``) x a ragged/skinny shape grid, plus the
+full candidate menu (tier-1 on a small shape, ``-m slow`` on the llama3
+sizes), and the simulator-primitive bugfixes that rode along: the
+``simulate_compute`` reference-dtype fallback and the ``exhaustive_best``
+empty-menu ValueError.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (PRESETS, TPU_V5E, GemmProblem, TileConfig,
+                        candidate_tiles, exhaustive_best, get_hardware,
+                        simulate_compute, simulate_gemm, simulate_gemm_batch,
+                        simulate_wave)
+
+# Ragged + skinny + square + batched: the regimes where padded-vs-real
+# accounting historically diverged (shared with tests/test_wave_model.py).
+SHAPES = [(1024, 4096, 4096), (1000, 1000, 1000), (100, 300, 77),
+          (8, 8192, 512), (8192, 8, 512), (129, 257, 513)]
+
+# Both schedules, grouping, and split-K — the event streams they generate
+# (spans, partials, combines, fixups) all have to price identically.
+CONFIGS = [TileConfig(128, 128, 64), TileConfig(64, 64, 32, group_m=4),
+           TileConfig(128, 64, 64, split_k=4),
+           TileConfig(128, 128, 64, schedule="stream_k"),
+           TileConfig(64, 128, 32, group_m=8, schedule="stream_k"),
+           TileConfig(256, 128, 32, split_k=2, group_m=4)]
+
+
+def assert_result_identical(a, b, ctx=()):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float):
+            assert va.hex() == vb.hex(), ctx + (f.name, va, vb)
+        elif isinstance(va, dict):
+            assert set(va) == set(vb), ctx + (f.name,)
+            for k in va:
+                assert va[k].hex() == vb[k].hex(), ctx + (f.name, k)
+        else:
+            assert va == vb, ctx + (f.name, va, vb)
+
+
+@pytest.mark.parametrize("hw_name", PRESETS)
+def test_batch_bit_identical_to_scalar(hw_name):
+    hw = get_hardware(hw_name)
+    for (M, N, K) in SHAPES:
+        p = GemmProblem(M=M, N=N, K=K)
+        batch = simulate_gemm_batch(p, CONFIGS, hw)
+        assert len(batch) == len(CONFIGS)
+        for t, rb in zip(CONFIGS, batch):
+            ra = simulate_gemm(p, t, hw)
+            assert_result_identical(ra, rb, (hw_name, (M, N, K), t))
+
+
+@pytest.mark.parametrize("hw_name", PRESETS)
+def test_full_menu_bit_identical_small_shape(hw_name):
+    """The oracle's actual call pattern: the FULL candidate menu of one
+    shape in one batch."""
+    hw = get_hardware(hw_name)
+    p = GemmProblem(M=100, N=300, K=77)
+    cands = candidate_tiles(p, hw)
+    assert cands
+    batch = simulate_gemm_batch(p, cands, hw)
+    for t, rb in zip(cands, batch):
+        assert_result_identical(simulate_gemm(p, t, hw), rb,
+                                (hw_name, t))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hw_name", PRESETS)
+def test_full_menu_bit_identical_llama3_shape(hw_name):
+    hw = get_hardware(hw_name)
+    p = GemmProblem(M=1024, N=4096, K=4096)
+    cands = candidate_tiles(p, hw)
+    batch = simulate_gemm_batch(p, cands, hw)
+    for t, rb in zip(cands, batch):
+        assert_result_identical(simulate_gemm(p, t, hw), rb,
+                                (hw_name, t))
+
+
+def test_batch_empty_candidates_returns_empty():
+    assert simulate_gemm_batch(GemmProblem(M=128, N=128, K=128), [],
+                               get_hardware("gpu_mi300x_like")) == []
+
+
+def test_exhaustive_best_matches_scalar_argmin():
+    """First-min tie-break preserved: the batch-priced argmin equals the
+    scalar loop's."""
+    hw = get_hardware("gpu_h100_like")
+    p = GemmProblem(M=640, N=256, K=256)
+    cands = candidate_tiles(p, hw)
+    best_t, best_r = exhaustive_best(p, hw, cands)
+    ref_t, ref_r = None, None
+    for t in cands:
+        r = simulate_gemm(p, t, hw)
+        if ref_r is None or r.time < ref_r.time:
+            ref_t, ref_r = t, r
+    assert best_t == ref_t
+    assert best_r.time.hex() == ref_r.time.hex()
+
+
+def test_exhaustive_best_empty_candidates_raises():
+    p = GemmProblem(M=384, N=512, K=640)
+    with pytest.raises(ValueError, match=r"M=384 N=512 K=640"):
+        exhaustive_best(p, get_hardware("tpu_v5e"), [])
+
+
+def test_simulate_compute_reference_dtype_fallback():
+    """bf16-less topologies fall back to the shared reference-dtype rule —
+    the same default ``simulate_wave`` applies — instead of raising
+    ``KeyError`` out of the calibration probes."""
+    hw = TPU_V5E.with_calibration(peak_flops={"float32": 49e12})
+    s = simulate_compute(hw, None, 128)
+    assert math.isfinite(s) and s > hw.kernel_launch
+    # Same rate the wave primitive's fallback resolves to: one wave of C
+    # units on C cores at the static share == the same chip-rate atoms.
+    mm, mn, mk = hw.mxu_shape
+    assert math.isclose(s - hw.kernel_launch,
+                        128 * (2.0 * mm * mn * mk) / 49e12, rel_tol=1e-12)
+    assert math.isfinite(simulate_wave(hw, 8, 16))
+
+
+def test_simulate_compute_explicit_dtype_still_exact():
+    hw = get_hardware("tpu_v5e")
+    mm, mn, mk = hw.mxu_shape
+    s = simulate_compute(hw, "bfloat16", 64)
+    assert math.isclose(s - hw.kernel_launch,
+                        64 * (2.0 * mm * mn * mk) / hw.flops("bfloat16"),
+                        rel_tol=1e-12)

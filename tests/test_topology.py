@@ -40,6 +40,7 @@ from repro.core.selector import (
     candidate_arrays,
     load_selection_cache,
     select_fast,
+    unload_selection_cache,
 )
 
 MULTI_LEVEL = (GPU_MI300X_LIKE, GPU_H100_LIKE)
@@ -343,5 +344,5 @@ def test_disk_selection_cache_warm_start(tmp_path, monkeypatch):
 
     # deactivate persistence for the rest of the suite
     monkeypatch.delenv("REPRO_SELECTION_CACHE")
-    load_selection_cache()
+    unload_selection_cache()
     clear_selection_cache()
