@@ -27,6 +27,8 @@ from repro.core.bucketing import plan_buckets, pow2_plan, step_gemms
 from repro.kernels import ops
 from repro.launch.engine import ServingEngine
 from repro.nn.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def run(smoke: bool = True, verbose: bool = True, seed: int = 0,
@@ -95,6 +97,42 @@ def run(smoke: bool = True, verbose: bool = True, seed: int = 0,
     # must generate the same tokens.
     for a, b in zip(tokens_by_plan["model_priced"], tokens_by_plan["pow2"]):
         assert np.array_equal(a, b), "bucketing changed generated tokens"
+
+    # Tracing-overhead check: the model-priced run again with the full
+    # telemetry stack on (tracer + metrics registry).  Tokens must be
+    # bit-identical — telemetry only observes — and the tok/s ratio is
+    # the measured cost of leaving tracing enabled.
+    prev_tracer = obs_trace.set_tracer(obs_trace.Tracer())
+    prev_metrics = obs_metrics.enable_metrics(True)
+    try:
+        plan = plans["model_priced"]
+        eng = ServingEngine(model, params, max_batch=max_batch,
+                            max_len=max_len, plan=plan, temperature=0.0,
+                            seed=seed, sync_every=4, quiet=True)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=gen)
+        eng.warm_start()
+        stats = eng.run()
+        traced_tokens = [stats["results"][r].tokens
+                         for r in sorted(stats["results"])]
+        n_spans = len(obs_trace.get_tracer().spans)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+        obs_metrics.enable_metrics(prev_metrics)
+    for a, b in zip(tokens_by_plan["model_priced"], traced_tokens):
+        assert np.array_equal(a, b), "tracing changed generated tokens"
+    base_tps = out["model_priced"]["tokens_per_s"]
+    out["tracing_overhead"] = {
+        "tokens_per_s_disabled": base_tps,
+        "tokens_per_s_enabled": stats["tokens_per_s"],
+        "ratio": stats["tokens_per_s"] / max(base_tps, 1e-12),
+        "spans": n_spans,
+    }
+    if verbose:
+        print(f"[serving] tracing overhead: {base_tps:.1f} tok/s off vs "
+              f"{stats['tokens_per_s']:.1f} tok/s on "
+              f"({out['tracing_overhead']['ratio']:.3f}x, "
+              f"{n_spans} spans)")
 
     write_csv("serving_throughput.csv",
               ["plan", "edges", "modeled_total_ms", "modeled_pad_frac",

@@ -34,6 +34,8 @@ import numpy as np
 
 from repro.core.selector import Selection, select_gemm_config_batch
 from repro.core.topology import Topology
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def step_gemms(d_model: int, d_ff: int, *, kv_dim: Optional[int] = None,
@@ -161,6 +163,32 @@ def plan_buckets(sizes: Sequence[int], weights: Optional[Sequence[float]]
         raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
     if granularity < 1:
         raise ValueError(f"granularity must be >= 1, got {granularity}")
+    with obs_trace.span("plan_buckets", cat="bucketing", track="bucketing",
+                        args={"n_sizes": len(sizes),
+                              "max_buckets": max_buckets}) as _sp:
+        plan = _plan_buckets(sizes, weights, gemms=gemms, hw=hw,
+                             max_buckets=max_buckets,
+                             bucket_overhead_s=bucket_overhead_s,
+                             granularity=granularity,
+                             in_dtype=in_dtype, out_dtype=out_dtype)
+        if _sp is not None:
+            _sp.args["edges"] = list(plan.edges)
+            _sp.args["modeled_total_s"] = plan.modeled_total_s
+            _sp.args["pad_fraction"] = plan.pad_fraction
+    obs_metrics.set_gauge("bucket_plan_edges", len(plan.edges))
+    obs_metrics.set_gauge("bucket_plan_pad_fraction", plan.pad_fraction)
+    obs_metrics.set_gauge("bucket_plan_modeled_total_s",
+                          plan.modeled_total_s)
+    return plan
+
+
+def _plan_buckets(sizes: Sequence[int], weights: Optional[Sequence[float]]
+                  = None, *, gemms: Sequence[Tuple[int, int]],
+                  hw: Topology, max_buckets: int = 8,
+                  bucket_overhead_s: float = 1e-3,
+                  granularity: int = 8,
+                  in_dtype: str = "bfloat16", out_dtype: str = "float32"
+                  ) -> BucketPlan:
     ss, ws = _normalize(sizes, weights)
     hi = ss[-1]
     # Candidates: every granularity multiple covering the range, with 25%

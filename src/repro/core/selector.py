@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.core.dtypes import ACC_BYTES, DTYPE_BYTES
 from repro.core.hardware import TPU_V5E
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core.topology import (SCHEDULES, HardwareSpec, _is_pow2,
                                  topology_fingerprint)
 from repro.core.latency import (
@@ -778,12 +780,34 @@ def remove_selection_hook(fn: Callable[["Selection", str], None]) -> None:
 
 
 def _emit_selection(sel: "Selection", source: str) -> None:
+    # Telemetry first (DESIGN.md §11): one gated counter per source and —
+    # when a tracer is installed — the full selection record as a trace
+    # event, including the winning LatencyBreakdown's per-level views.
+    obs_metrics.inc("selections_total", labels={"source": source})
+    if obs_trace.tracing_enabled():
+        p, c, bd = sel.problem, sel.config, sel.predicted
+        obs_trace.event(
+            "select_gemm_config", cat="selection", track="selection",
+            args={"source": source,
+                  "shape": [p.M, p.N, p.K, p.batch],
+                  "dtype": p.in_dtype,
+                  "config": {"bm": c.bm, "bn": c.bn, "bk": c.bk,
+                             "split_k": c.split_k, "group_m": c.group_m,
+                             "schedule": c.schedule},
+                  "n_candidates": sel.n_candidates,
+                  "predicted_s": bd.total,
+                  "bottleneck": bd.bottleneck,
+                  "level_bytes": dict(bd.level_bytes),
+                  "level_seconds": dict(bd.level_seconds)})
     for fn in list(_SELECTION_HOOKS):
         try:
             fn(sel, source)
         except Exception as e:                      # noqa: BLE001
+            hook_name = getattr(fn, "__name__", str(fn))
+            obs_metrics.inc("selection_hook_errors",
+                            labels={"hook": hook_name})
             warnings.warn(
-                f"selection hook {getattr(fn, '__name__', fn)!r} raised "
+                f"selection hook {hook_name!r} raised "
                 f"{e!r} on source {source!r}; hook skipped",
                 RuntimeWarning, stacklevel=2)
 

@@ -166,17 +166,27 @@ def _tile_order(Tm: int, Tn: int, group_m: int) -> Iterator[Tuple[int, int]]:
                 yield i, j
 
 
-def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec) -> SimResult:
+def simulate_gemm(p: GemmProblem, t: TileConfig, hw: HardwareSpec,
+                  events: Optional[List[Tuple]] = None) -> SimResult:
     """Dispatch: the event-level single-core pipeline (bit-identical to the
     PR 2 simulator) on 1-core chains; the round-robin multi-core scheduler
-    otherwise."""
+    otherwise.
+
+    ``events`` (optional) collects the priced timeline as
+    ``(track, name, t_start, t_end, args)`` tuples — one span per DMA
+    fetch / compute step / writeback on the single-core pipeline (bulk
+    fast-path regions appear as one aggregated span), one span per
+    fetch/write event per core on multi-core chains.  Capture is append-
+    only: the priced ``SimResult`` is bit-identical with or without it
+    (``repro.obs.perfetto`` renders the list as Perfetto tracks)."""
     if hw.total_cores() > 1:
-        return _simulate_multicore(p, t, hw)
-    return _simulate_single_core(p, t, hw)
+        return _simulate_multicore(p, t, hw, events)
+    return _simulate_single_core(p, t, hw, events)
 
 
 def _simulate_single_core(p: GemmProblem, t: TileConfig,
-                          hw: HardwareSpec) -> SimResult:
+                          hw: HardwareSpec,
+                          events: Optional[List[Tuple]] = None) -> SimResult:
     bi = DTYPE_BYTES[p.in_dtype]
     bo = DTYPE_BYTES[p.out_dtype]
     mm, mn, mk = hw.mxu_shape
@@ -232,9 +242,15 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
             dma_start = max(dma_cursor, gate)
             dma_cursor = dma_start + fetch_seconds + hw.dma_fixed
             ready = dma_cursor
+            if events is not None:
+                events.append(("dma", "fetch", dma_start, dma_cursor,
+                               {"bytes": fetch_bytes}))
         else:
             ready = gate                              # fully revisited step
         comp_cursor = max(comp_cursor, ready) + ct
+        if events is not None:
+            events.append(("core0", "compute", comp_cursor - ct,
+                           comp_cursor, None))
         comp_hist.append(comp_cursor)
         if len(comp_hist) > depth + 1:
             del comp_hist[0]
@@ -259,6 +275,9 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
         port_s = bytes_ / bw + hw.dma_fixed
         dma_cursor += port_s
         out_cursor = max(out_cursor, comp_cursor + port_s, dma_cursor)
+        if events is not None:
+            events.append(("dma", "write_back", dma_cursor - port_s,
+                           dma_cursor, {"bytes": bytes_}))
         total_bytes += bytes_
         clock += bytes_                               # writes evict too
         level_bytes[backing.name] += bytes_
@@ -310,12 +329,21 @@ def _simulate_single_core(p: GemmProblem, t: TileConfig,
                     bulk = rest - (1 if ragged else 0)
                     if bulk > 0:
                         slope = max(sf + hw.dma_fixed, ct)
+                        if events is not None:
+                            dma0, comp0 = dma_cursor, comp_cursor
                         dma_cursor += bulk * (sf + hw.dma_fixed)
                         comp_cursor = max(comp_cursor + bulk * ct,
                                           dma_cursor + ct)
                         comp_cursor = max(comp_cursor,
                                           (comp_hist[-1] if comp_hist else 0)
                                           + bulk * slope)
+                        if events is not None:
+                            events.append(("dma", "fetch[bulk]", dma0,
+                                           dma_cursor,
+                                           {"steps": bulk,
+                                            "bytes": bulk * f}))
+                            events.append(("core0", "compute[bulk]", comp0,
+                                           comp_cursor, {"steps": bulk}))
                         comp_hist.append(comp_cursor)
                         if len(comp_hist) > depth + 1:
                             del comp_hist[0]
@@ -377,7 +405,8 @@ class _PlacedGrid:
 
 
 def _simulate_multicore(p: GemmProblem, t: TileConfig,
-                        hw: HardwareSpec) -> SimResult:
+                        hw: HardwareSpec,
+                        events: Optional[List[Tuple]] = None) -> SimResult:
     """Round-robin multi-core scheduler over the chip's cores.
 
     Compute rates are the chip aggregates shared evenly (MXU: peak/C,
@@ -417,7 +446,7 @@ def _simulate_multicore(p: GemmProblem, t: TileConfig,
     pricing convention — ``tests/test_wave_model.py`` pins them); the
     second pass prices every recorded event with its wave's populations.
     """
-    return _price_multicore(_place_multicore(p, t, hw), hw)
+    return _price_multicore(_place_multicore(p, t, hw), hw, events)
 
 
 def _place_multicore(p: GemmProblem, t: TileConfig,
@@ -624,7 +653,8 @@ def _place_multicore(p: GemmProblem, t: TileConfig,
                        n_steps=n_steps, units=units, waves=waves)
 
 
-def _price_multicore(g: _PlacedGrid, hw: HardwareSpec) -> SimResult:
+def _price_multicore(g: _PlacedGrid, hw: HardwareSpec,
+                     events: Optional[List[Tuple]] = None) -> SimResult:
     """Pass 2 — fetch-stream populations per (wave, level): the cores of a
     wave that fetch from a level share its port; everyone else does not
     occupy it.  Writes/partials are priced at their wave's population
@@ -633,6 +663,7 @@ def _price_multicore(g: _PlacedGrid, hw: HardwareSpec) -> SimResult:
     bw = [lvl.bandwidth for lvl in hw.levels]
     ct = g.ct
     core_time = [0.0] * C
+    launch = hw.kernel_launch + hw.hbm_latency
 
     pop: Dict[Tuple[int, int], set] = {}
     for (core, wave, _, _, _, _, _, _, ia, ib) in g.fetch_events:
@@ -652,12 +683,21 @@ def _price_multicore(g: _PlacedGrid, hw: HardwareSpec) -> SimResult:
         if fa_r or fb_r:
             secs += max(ct, (fa_r * na / bw[ia]
                              + fb_r * nb / bw[ib]) + hw.dma_fixed)
+        if events is not None:
+            t0 = launch + core_time[core]
+            events.append((f"core{core}", f"unit w{wave}", t0, t0 + secs,
+                           {"wave": wave,
+                            "bytes": (nfull * (fa + fb) + fa_r + fb_r)}))
         core_time[core] += secs
     for (core, wave, bytes_, il) in g.write_events:
         n = n_pop.get((wave, il), 1)
-        core_time[core] += bytes_ * n / bw[il]
-
-    launch = hw.kernel_launch + hw.hbm_latency
+        secs = bytes_ * n / bw[il]
+        if events is not None:
+            t0 = launch + core_time[core]
+            events.append((f"core{core}", f"write w{wave}", t0, t0 + secs,
+                           {"wave": wave, "bytes": bytes_,
+                            "level": hw.levels[il].name}))
+        core_time[core] += secs
     end = launch + max(core_time)
     return SimResult(time=end, hbm_bytes=g.total_bytes,
                      mxu_busy=g.mxu_busy, steps=g.n_steps,

@@ -43,6 +43,8 @@ from repro.kernels.flash_attention import (
     select_attention_blocks,
 )
 from repro.kernels.matmul import matmul_pallas
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.fault_tolerance import retry
 
 _BACKENDS = ("pallas", "pallas_interpret", "reference")
@@ -243,10 +245,17 @@ def matmul(
         out = out[:M, :N]
         return out.reshape(*lead, a.shape[-2], N) if lead else out
 
+    def _on_retry(attempt: int, e: Exception) -> None:
+        obs_metrics.inc("launch_retries")
+        obs_trace.event("launch_retry", cat="fault", track="launch",
+                        args={"attempt": attempt, "error": repr(e),
+                              "shape": [M, N, K]})
+
     def _try(cfg: TileConfig) -> jax.Array:
         return retry(_launch, cfg, retries=_LAUNCH_RETRIES,
                      base_delay=_LAUNCH_BASE_DELAY,
-                     max_delay=_LAUNCH_MAX_DELAY)
+                     max_delay=_LAUNCH_MAX_DELAY,
+                     on_retry=_on_retry)
 
     if selected is None:
         # Explicit config: the caller's contract.  Transient-retry the
@@ -265,12 +274,18 @@ def matmul(
         except Exception as e:                      # noqa: BLE001
             first_err = e
             reason = f"launch failed: {e!r}"
+    obs_metrics.inc("launch_validation_failures")
+    obs_trace.event("selection_rejected", cat="fault", track="launch",
+                    args={"shape": [M, N, K], "reason": reason})
     warnings.warn(
         f"selected config {config} rejected ({reason}); "
         f"walking fallback ladder", DegradedModeWarning, stacklevel=2)
     for sel_f, rung in fallback_ladder(p, hw, config):
         if validate_selection(p, sel_f.config, hw) is not None:
             continue
+        obs_metrics.inc("fallback_rungs", labels={"rung": rung})
+        obs_trace.event("fallback_rung", cat="fault", track="launch",
+                        args={"shape": [M, N, K], "rung": rung})
         emit_fallback(sel_f, rung)
         try:
             return _try(sel_f.config)
@@ -279,6 +294,9 @@ def matmul(
             continue
     # Every tiled rung failed — the reference oracle is semantically
     # identical and cannot mis-tile; report it as the final rung.
+    obs_metrics.inc("fallback_rungs", labels={"rung": "reference"})
+    obs_trace.event("fallback_rung", cat="fault", track="launch",
+                    args={"shape": [M, N, K], "rung": "reference"})
     emit_fallback(selected, "reference")
     warnings.warn(
         f"all tiled fallbacks failed for {p.M}x{p.N}x{p.K} "

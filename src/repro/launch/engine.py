@@ -47,8 +47,13 @@ import jax.numpy as jnp
 
 from repro.core.bucketing import BucketPlan, step_gemms
 from repro.core.selector import select_gemm_config_batch
+from repro.core.topology import topology_fingerprint
 from repro.kernels import ops
 from repro.nn.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.drift import get_drift_monitor, record_step_drift
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.fault_tolerance import (PreemptionGuard, StragglerMonitor,
                                            retry)
 
@@ -103,7 +108,8 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  sync_every: int = 8,
                  decode_fault: Optional[Callable[..., None]] = None,
-                 straggler_window: int = 16, straggler_min_steps: int = 4):
+                 straggler_window: int = 16, straggler_min_steps: int = 4,
+                 quiet: bool = False):
         cfg = model.cfg
         if plan is not None and cfg.family in ("ssm", "hybrid"):
             raise ValueError(
@@ -125,6 +131,15 @@ class ServingEngine:
         self.straggler = StragglerMonitor(window=straggler_window,
                                           min_steps=straggler_min_steps)
         self.retries = 0
+        self.quiet = bool(quiet)
+        # Per-run metrics registry (DESIGN.md §11): ``run()`` rebuilds it,
+        # backs the integer stats counters with it, and merge-publishes it
+        # into the process-global registry when metrics are enabled.  Kept
+        # as an attribute so ``launch/serve.py`` can export it afterwards.
+        self.run_registry: MetricsRegistry = MetricsRegistry()
+        # Modeled one-decode-step latency at M = max_batch (the drift
+        # monitor's prediction for each sync window); filled by warm_start.
+        self.predicted_step_s: Optional[float] = None
 
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -189,7 +204,16 @@ class ServingEngine:
                  else {int(r.prompt.size) for r in self._queue})
         ms.add(self.max_batch)                # the decode step's M extent
         shapes = [(m, n, k) for m in sorted(ms) for (n, k) in gemms]
-        select_gemm_config_batch(shapes, hw=ops.get_default_hardware())
+        with obs_trace.span("warm_start", cat="engine", track="engine",
+                            args={"n_shapes": len(shapes)}):
+            sels = select_gemm_config_batch(shapes,
+                                            hw=ops.get_default_hardware())
+        # The decode step's modeled latency: the summed priced latency of
+        # its step GEMMs at M = max_batch — the drift monitor's prediction
+        # for every measured sync window.
+        self.predicted_step_s = sum(
+            s.predicted.total for s, (m, _n, _k) in zip(sels, shapes)
+            if m == self.max_batch)
         return len(shapes)
 
     # -- serving loop ------------------------------------------------------
@@ -202,10 +226,20 @@ class ServingEngine:
                 jax.random.fold_in(self._base_key, c), _KEY_CHUNK)
         return chunk[r]
 
+    def _status(self, msg: str) -> None:
+        obs_trace.event("status", cat="engine", track="engine",
+                        args={"msg": msg})
+        if not self.quiet:
+            print(f"[engine] {msg}")
+
     def _count_retry(self, attempt: int, err: Exception) -> None:
         self.retries += 1
-        print(f"[engine] transient fault absorbed "
-              f"(attempt {attempt + 1}): {err!r}")
+        self.run_registry.counter("engine_retries").inc()
+        obs_metrics.inc("engine_retries")
+        obs_trace.event("step_retry", cat="fault", track="engine",
+                        args={"attempt": attempt + 1, "error": repr(err)})
+        self._status(f"transient fault absorbed "
+                     f"(attempt {attempt + 1}): {err!r}")
 
     def run(self) -> Dict:
         """Serve the queue to completion (or preemption drain); returns the
@@ -221,8 +255,18 @@ class ServingEngine:
         first_tok: Dict[int, jax.Array] = {}  # rid -> (1,) prefill token
         meta: Dict[int, Tuple[int, int, int]] = {}  # rid -> (plen,padded,adm)
         finished: Dict[int, int] = {}        # rid -> finish_step
-        bucket_hits: Dict[int, int] = {}
-        real_rows = padded_rows = 0
+        # Per-run metrics registry: the integer stats accumulators ARE
+        # registry counters now (same arithmetic, so the public stats dict
+        # stays bit-identical); merged into the process-global registry at
+        # run end when metrics are enabled.
+        reg = self.run_registry = MetricsRegistry()
+        c_real = reg.counter("engine_real_rows")
+        c_padded = reg.counter("engine_padded_rows")
+        tr = obs_trace.get_tracer()
+        drift_on = (self.predicted_step_s is not None
+                    and get_drift_monitor() is not None)
+        topo_fp = (topology_fingerprint(ops.get_default_hardware())
+                   if drift_on else "")
         t_prefill = 0.0
         dispatch_acc: List[float] = []
         drained = False
@@ -230,7 +274,7 @@ class ServingEngine:
         t_sync = None
 
         def admit(b: int) -> None:
-            nonlocal t_prefill, real_rows, padded_rows, tokens
+            nonlocal t_prefill, tokens
             nonlocal cache
             req = self._queue.pop(0)
             plen = int(req.prompt.size)
@@ -240,14 +284,18 @@ class ServingEngine:
             last_pos = (jnp.asarray([plen - 1], jnp.int32)
                         if padded != plen else None)
             t0 = time.perf_counter()
-            logits, pc = retry(
-                lambda: self._prefill(self.params, jnp.asarray(prompt),
-                                      req.extras or None, last_pos),
-                retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
-                max_delay=_STEP_MAX_DELAY, on_retry=self._count_retry)
-            cache = self._insert(cache, pc, jnp.int32(b))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
-            tokens = tokens.at[b].set(tok[0])
+            with (tr.span("prefill", cat="engine", track="engine",
+                          args={"rid": req.rid, "slot": b,
+                                "prompt_len": plen, "padded_len": padded})
+                  if tr is not None else obs_trace.NULL_SPAN):
+                logits, pc = retry(
+                    lambda: self._prefill(self.params, jnp.asarray(prompt),
+                                          req.extras or None, last_pos),
+                    retries=_STEP_RETRIES, base_delay=_STEP_BASE_DELAY,
+                    max_delay=_STEP_MAX_DELAY, on_retry=self._count_retry)
+                cache = self._insert(cache, pc, jnp.int32(b))
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
+                tokens = tokens.at[b].set(tok[0])
             t_prefill += time.perf_counter() - t0
             first_tok[req.rid] = tok
             slots[b].rid = req.rid
@@ -256,9 +304,10 @@ class ServingEngine:
             slots[b].admit_step = step
             pos_host[b] = plen
             meta[req.rid] = (plen, padded, step)
-            bucket_hits[padded] = bucket_hits.get(padded, 0) + 1
-            real_rows += plen
-            padded_rows += padded
+            reg.counter("engine_bucket_hits",
+                        labels={"edge": str(padded)}).inc()
+            c_real.inc(plen)
+            c_padded.inc(padded)
             if slots[b].remaining == 0:       # single-token request
                 finished[req.rid] = step
                 slots[b].rid = -1
@@ -269,8 +318,8 @@ class ServingEngine:
                 if guard.should_stop:
                     if any(s.active for s in slots) or self._queue:
                         drained = True
-                        print(f"[engine] preemption requested; draining "
-                              f"after {step} decode steps")
+                        self._status(f"preemption requested; draining "
+                                     f"after {step} decode steps")
                     break
                 for b in range(B):
                     if not slots[b].active and self._queue:
@@ -288,12 +337,18 @@ class ServingEngine:
                     return self._decode(self.params, cache, tokens, pos_dev)
 
                 td0 = time.perf_counter()
-                logits, cache = retry(
-                    body, retries=_STEP_RETRIES,
-                    base_delay=_STEP_BASE_DELAY, max_delay=_STEP_MAX_DELAY,
-                    on_retry=self._count_retry)
-                tokens = self._sample(logits, self._key(step)
-                                      ).astype(jnp.int32)
+                with (tr.span("decode_step", cat="engine", track="engine",
+                              args={"step": this_step,
+                                    "active": sum(1 for s in slots
+                                                  if s.active)})
+                      if tr is not None else obs_trace.NULL_SPAN):
+                    logits, cache = retry(
+                        body, retries=_STEP_RETRIES,
+                        base_delay=_STEP_BASE_DELAY,
+                        max_delay=_STEP_MAX_DELAY,
+                        on_retry=self._count_retry)
+                    tokens = self._sample(logits, self._key(step)
+                                          ).astype(jnp.int32)
                 dispatch_acc.append(time.perf_counter() - td0)
                 tok_log.append(tokens)
                 owners.append(tuple(s.rid for s in slots))
@@ -314,11 +369,30 @@ class ServingEngine:
                     window = now - (t_sync if t_sync is not None else t_run0)
                     t_sync = now
                     n = min(self.sync_every, len(dispatch_acc))
-                    msg = self.straggler.record(
-                        window / max(n, 1),
-                        dispatch_s=sum(dispatch_acc[-n:]) / max(n, 1))
+                    device_s = window / max(n, 1)
+                    dispatch_s = sum(dispatch_acc[-n:]) / max(n, 1)
+                    msg = self.straggler.record(device_s,
+                                                dispatch_s=dispatch_s)
                     if msg:
-                        print(f"[engine] {msg}")
+                        reg.counter("engine_straggler_flags").inc()
+                        obs_metrics.inc("engine_straggler_flags")
+                        obs_trace.event(
+                            "straggler_flag", cat="engine", track="engine",
+                            args={"step": step, "device_step_s": device_s,
+                                  "dispatch_s": dispatch_s, "msg": msg})
+                        self._status(msg)
+                    if obs_metrics.metrics_enabled():
+                        obs_metrics.set_gauge("engine_queue_depth",
+                                              len(self._queue))
+                        obs_metrics.set_gauge(
+                            "engine_slot_occupancy",
+                            sum(1 for s in slots if s.active) / B)
+                    if drift_on:
+                        record_step_drift(
+                            site="decode_step", shape=(B,),
+                            predicted_s=self.predicted_step_s,
+                            measured_s=device_s, topo=topo_fp,
+                            step=step, dispatch_s=dispatch_s)
         jax.block_until_ready(tokens)
         t_decode = time.perf_counter() - t_run0
         rem = step % self.sync_every
@@ -328,6 +402,12 @@ class ServingEngine:
             self.straggler.record(
                 window / rem,
                 dispatch_s=sum(dispatch_acc[-rem:]) / rem)
+            if drift_on:
+                record_step_drift(
+                    site="decode_step", shape=(B,),
+                    predicted_s=self.predicted_step_s,
+                    measured_s=window / rem, topo=topo_fp,
+                    step=step, dispatch_s=sum(dispatch_acc[-rem:]) / rem)
 
         # One transfer for the whole run: stack the device-side step log.
         decoded = (np.asarray(jnp.stack(tok_log)) if tok_log
@@ -347,7 +427,21 @@ class ServingEngine:
                 tokens=np.asarray(cols, np.int32), admit_step=adm,
                 finish_step=fin, finished=rid in finished)
             emitted += len(cols)
+        # Stats come off the per-run registry where the accumulator was a
+        # counter (same integer arithmetic as the old hand-rolled dicts, so
+        # the public schema AND values are unchanged).
+        real_rows, padded_rows = c_real.value, c_padded.value
         pad_frac = (1.0 - real_rows / padded_rows) if padded_rows else 0.0
+        bucket_hits = {int(dict(m.labels)["edge"]): m.value
+                       for m in reg.metrics()
+                       if m.name == "engine_bucket_hits"}
+        tokens_per_s = emitted / max(t_decode + t_prefill, 1e-9)
+        reg.counter("engine_steps").inc(step)
+        reg.counter("engine_tokens_emitted").inc(emitted)
+        reg.gauge("engine_tokens_per_s").set(tokens_per_s)
+        reg.gauge("engine_pad_fraction").set(pad_frac)
+        if obs_metrics.metrics_enabled():
+            obs_metrics.get_registry().merge(reg)
         return {
             "results": results,
             "steps": step,
@@ -357,7 +451,7 @@ class ServingEngine:
             "t_prefill_s": t_prefill,
             "t_decode_s": t_decode,
             "tokens_emitted": emitted,
-            "tokens_per_s": emitted / max(t_decode + t_prefill, 1e-9),
+            "tokens_per_s": tokens_per_s,
             "bucket_hits": dict(sorted(bucket_hits.items())),
             "pad_fraction": pad_frac,
             "dispatch_s_mean": (sum(dispatch_acc) / len(dispatch_acc)

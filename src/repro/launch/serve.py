@@ -35,6 +35,7 @@ is the CLI shim.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import Callable, Dict, Optional
 
@@ -45,7 +46,8 @@ import jax
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.bucketing import plan_buckets, step_gemms
 from repro.core.hardware import TPU_V5E
-from repro.core.selector import load_selection_cache
+from repro.core.selector import load_selection_cache, select_gemm_config
+from repro.core.simulator import simulate_gemm
 from repro.core.topology import load_calibrated_topology_guarded
 from repro.distributed import param_shardings
 from repro.kernels import ops
@@ -53,6 +55,10 @@ from repro.launch.engine import ServingEngine
 from repro.launch.mesh import make_local_mesh
 from repro.nn.frontends import synth_frontend_inputs
 from repro.nn.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.drift import DriftMonitor, set_drift_monitor
+from repro.obs.perfetto import export_chrome_trace
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -80,6 +86,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode steps between device syncs (straggler "
                          "sampling granularity)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress stdout status lines (they still flow "
+                         "through the trace/metrics layer)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="enable telemetry and write trace.json (Perfetto), "
+                         "metrics.prom, metrics.jsonl and drift.jsonl "
+                         "under DIR")
     return ap
 
 
@@ -102,10 +115,80 @@ def run_serving(args: argparse.Namespace, *,
     (``pad_fraction``, ``bucket_hits``, ``dispatch_s_mean``,
     ``device_step_s_mean``, ``tokens_per_s``), and the topology served
     against (plus ``degraded`` when the artifact was rejected).
+
+    ``--quiet`` suppresses the stdout status lines (they still flow
+    through the trace layer as events); ``--trace-dir DIR`` installs the
+    telemetry subsystem for the run and writes ``trace.json`` (Perfetto,
+    with the decode-step GEMMs' simulator timelines), ``metrics.prom``,
+    ``metrics.jsonl`` and ``drift.jsonl`` under DIR.  The stats dict is
+    identical either way.
     """
+    quiet = bool(getattr(args, "quiet", False))
+    trace_dir = getattr(args, "trace_dir", None)
+
+    def _say(msg: str) -> None:
+        obs_trace.event("status", cat="serve", track="serve",
+                        args={"msg": msg})
+        if not quiet:
+            print(msg)
+
+    prev_tracer = prev_mon = drift_mon = None
+    prev_metrics = False
+    if trace_dir:
+        prev_tracer = obs_trace.set_tracer(obs_trace.Tracer())
+        prev_metrics = obs_metrics.enable_metrics(True)
+        obs_metrics.get_registry().clear()
+        drift_mon = DriftMonitor(path=os.path.join(trace_dir,
+                                                   "drift.jsonl"))
+        prev_mon = set_drift_monitor(drift_mon)
+    try:
+        out = _run_serving(args, decode_fault=decode_fault, say=_say,
+                           quiet=quiet)
+        if trace_dir:
+            _export_telemetry(trace_dir, args)
+        return out
+    finally:
+        if trace_dir:
+            obs_trace.set_tracer(prev_tracer)
+            set_drift_monitor(prev_mon)
+            drift_mon.close()
+            obs_metrics.enable_metrics(prev_metrics)
+
+
+def _export_telemetry(trace_dir: str, args: argparse.Namespace) -> None:
+    """Write the run's telemetry artifacts: the Perfetto trace (measured
+    tracer spans + the decode-step GEMMs' modeled simulator timelines),
+    the Prometheus textfile, and a metrics JSONL snapshot.  The drift
+    JSONL streams during the run (``DriftMonitor``)."""
+    cfg = get_config(args.arch, smoke=args.smoke)
+    hw = ops.get_default_hardware()
+    sim_timelines = []
+    if cfg.family != "ssm":
+        gemms = step_gemms(cfg.d_model, cfg.d_ff,
+                           kv_dim=cfg.num_kv_heads * cfg.head_dim,
+                           vocab=cfg.vocab_size,
+                           swiglu=cfg.activation == "swiglu")[:3]
+        for (n, k) in gemms:
+            sel = select_gemm_config(args.batch, n, k, hw=hw)
+            ev: list = []
+            simulate_gemm(sel.problem, sel.config, hw, events=ev)
+            sim_timelines.append((f"gemm {args.batch}x{n}x{k}", ev))
+    tracer = obs_trace.get_tracer()
+    export_chrome_trace(os.path.join(trace_dir, "trace.json"),
+                        tracer.spans if tracer is not None else [],
+                        sim_timelines)
+    reg = obs_metrics.get_registry()
+    reg.write_prometheus(os.path.join(trace_dir, "metrics.prom"))
+    reg.write_jsonl(os.path.join(trace_dir, "metrics.jsonl"),
+                    kind="serving", arch=args.arch)
+
+
+def _run_serving(args: argparse.Namespace, *,
+                 decode_fault: Optional[Callable[..., None]],
+                 say: Callable[[str], None], quiet: bool) -> Dict:
     n_warm = load_selection_cache()            # $REPRO_SELECTION_CACHE
     if n_warm:
-        print(f"[selector] warm-started {n_warm} persisted GEMM selections")
+        say(f"[selector] warm-started {n_warm} persisted GEMM selections")
 
     topo_info: Dict = {"topology": TPU_V5E.name, "degraded": None}
     if getattr(args, "topology", None):
@@ -115,12 +198,12 @@ def run_serving(args: argparse.Namespace, *,
                      "degraded": prov.get("degraded"),
                      "quarantined": prov.get("quarantined")}
         if prov.get("degraded"):
-            print(f"[serve] topology artifact rejected "
-                  f"({prov['degraded']}); serving on stock "
-                  f"preset {topo.name}")
+            say(f"[serve] topology artifact rejected "
+                f"({prov['degraded']}); serving on stock "
+                f"preset {topo.name}")
         else:
-            print(f"[serve] serving against calibrated topology "
-                  f"{topo.name}")
+            say(f"[serve] serving against calibrated topology "
+                f"{topo.name}")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
@@ -154,16 +237,16 @@ def run_serving(args: argparse.Namespace, *,
                              vocab=cfg.vocab_size,
                              swiglu=cfg.activation == "swiglu"),
             hw=ops.get_default_hardware(), max_buckets=4)
-        print(f"[serve] priced bucket edges: {list(plan.edges)} "
-              f"(modeled step {plan.modeled_total_s * 1e3:.2f}ms, "
-              f"pad {plan.pad_fraction * 100:.1f}%)")
+        say(f"[serve] priced bucket edges: {list(plan.edges)} "
+            f"(modeled step {plan.modeled_total_s * 1e3:.2f}ms, "
+            f"pad {plan.pad_fraction * 100:.1f}%)")
 
     engine = ServingEngine(
         model, params, max_batch=args.batch, max_len=max_len, plan=plan,
         temperature=args.temperature, seed=args.seed,
         sync_every=getattr(args, "sync_every", 8),
         decode_fault=decode_fault,
-        straggler_window=16, straggler_min_steps=4)
+        straggler_window=16, straggler_min_steps=4, quiet=quiet)
 
     def _extras(i):
         if not extras:
@@ -177,8 +260,8 @@ def run_serving(args: argparse.Namespace, *,
     t0 = time.time()
     warmed = engine.warm_start()
     if warmed:
-        print(f"[serve] warm-started {warmed} serving GEMM shapes in one "
-              f"batched selection pass ({(time.time() - t0) * 1e3:.0f}ms)")
+        say(f"[serve] warm-started {warmed} serving GEMM shapes in one "
+            f"batched selection pass ({(time.time() - t0) * 1e3:.0f}ms)")
 
     stats = engine.run()
     results = stats["results"]
@@ -194,18 +277,18 @@ def run_serving(args: argparse.Namespace, *,
         tokens = rows
 
     toks_per_s = stats["tokens_per_s"]
-    print(f"arch={cfg.name} batch={args.batch} requests={n_req} "
-          f"prefill {args.prompt_len} tok in "
-          f"{stats['t_prefill_s'] * 1e3:.0f}ms; "
-          f"decoded {n_steps} steps at {toks_per_s:.1f} tok/s total")
-    print(f"[serve] dispatch {stats['dispatch_s_mean'] * 1e3:.2f}ms/step "
-          f"vs device {stats['device_step_s_mean'] * 1e3:.2f}ms/step; "
-          f"padding {stats['pad_fraction'] * 100:.1f}%; "
-          f"bucket hits {stats['bucket_hits']}")
+    say(f"arch={cfg.name} batch={args.batch} requests={n_req} "
+        f"prefill {args.prompt_len} tok in "
+        f"{stats['t_prefill_s'] * 1e3:.0f}ms; "
+        f"decoded {n_steps} steps at {toks_per_s:.1f} tok/s total")
+    say(f"[serve] dispatch {stats['dispatch_s_mean'] * 1e3:.2f}ms/step "
+        f"vs device {stats['device_step_s_mean'] * 1e3:.2f}ms/step; "
+        f"padding {stats['pad_fraction'] * 100:.1f}%; "
+        f"bucket hits {stats['bucket_hits']}")
     show = tokens if ragged else tokens[:2]
-    print("sample generations (first 2 rows, first 16 tokens):")
+    say("sample generations (first 2 rows, first 16 tokens):")
     for row in list(show)[:2]:
-        print("  ", np.asarray(row)[:16].tolist())
+        say(f"   {np.asarray(row)[:16].tolist()}")
     return {
         "tokens": tokens,
         "steps": n_steps,

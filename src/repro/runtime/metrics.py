@@ -1,25 +1,28 @@
-"""Step metrics: rolling stats + JSONL logging."""
+"""Step metrics: rolling stats + JSONL logging.
+
+``MetricLogger`` is a thin shim over :class:`repro.obs.metrics.JsonlSink`:
+the record schema and rolling ``steps_per_s`` computation are unchanged
+from the original hand-rolled implementation, but file handling (append
+mode, directory creation, flush-per-record) is delegated to the shared
+telemetry sink so all JSONL writers in the repo behave identically.
+"""
 from __future__ import annotations
 
-import json
-import os
 import time
 from collections import deque
 from typing import Any, Dict, Optional
+
+from repro.obs.metrics import JsonlSink
 
 
 class MetricLogger:
     def __init__(self, path: Optional[str] = None, window: int = 20):
         self.path = path
         self.window = deque(maxlen=window)
-        if path:
-            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._f = open(path, "a")
-        else:
-            self._f = None
+        self._sink = JsonlSink(path) if path else None
 
     def log(self, step: int, **metrics: Any) -> Dict:
-        rec = {"step": step, "time": time.time()}
+        rec: Dict[str, Any] = {"step": step, "time": time.time()}
         for k, v in metrics.items():
             try:
                 rec[k] = float(v)
@@ -29,11 +32,23 @@ class MetricLogger:
             self.window.append(rec["step_time"])
             rec["steps_per_s"] = (len(self.window)
                                   / max(sum(self.window), 1e-9))
-        if self._f:
-            self._f.write(json.dumps(rec) + "\n")
-            self._f.flush()
+        if self._sink is not None:
+            self._sink.write(rec)
         return rec
 
     def close(self):
-        if self._f:
-            self._f.close()
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
+    def __enter__(self) -> "MetricLogger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

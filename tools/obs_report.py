@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Summarize a telemetry directory (trace.json / metrics.prom /
+metrics.jsonl / drift.jsonl) into a human-readable markdown report.
+
+Usage::
+
+    PYTHONPATH=src python tools/obs_report.py experiments/obs
+    PYTHONPATH=src python tools/obs_report.py experiments/obs -o report.md
+
+The report contains one table per artifact that exists:
+
+* **Trace** — span count per (track, cat) with total duration, plus the
+  simulator timelines embedded in the Perfetto export.
+* **Metrics** — every counter/gauge from the Prometheus textfile (or
+  JSONL snapshot fallback), sorted by name.
+* **Drift** — record count, rolling fidelity, min/mean fidelity and the
+  worst offender per site.
+
+Only the standard library is used, so the tool runs anywhere the repo
+does (CI included).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def _fmt(v: float) -> str:
+    if v == int(v) and abs(v) < 1e12:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> List[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "| " + " | ".join("---" for _ in headers) + " |"]
+    for row in rows:
+        out.append("| " + " | ".join(row) + " |")
+    return out
+
+
+def summarize_trace(path: str) -> List[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    pids: Dict[int, str] = {}
+    tids: Dict[Tuple[int, int], str] = {}
+    for ev in events:
+        if ev.get("ph") == "M":
+            if ev.get("name") == "process_name":
+                pids[ev["pid"]] = ev["args"]["name"]
+            elif ev.get("name") == "thread_name":
+                tids[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    agg: Dict[Tuple[str, str, str], List[float]] = defaultdict(
+        lambda: [0, 0.0])
+    for ev in events:
+        if ev.get("ph") not in ("X", "i", "C"):
+            continue
+        proc = pids.get(ev["pid"], str(ev["pid"]))
+        track = tids.get((ev["pid"], ev["tid"]), str(ev.get("tid", "")))
+        cat = ev.get("cat", "")
+        cell = agg[(proc, track, cat)]
+        cell[0] += 1
+        cell[1] += float(ev.get("dur", 0.0))
+    lines = [f"## Trace — {len(events)} events", ""]
+    rows = [[proc, track, cat, str(int(n)), f"{dur / 1e3:.3f}"]
+            for (proc, track, cat), (n, dur) in sorted(agg.items())]
+    lines += _table(["process", "track", "cat", "events", "total ms"], rows)
+    return lines
+
+
+def _parse_prometheus(path: str) -> List[Tuple[str, float]]:
+    out: List[Tuple[str, float]] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            name, _, val = line.rpartition(" ")
+            try:
+                out.append((name, float(val)))
+            except ValueError:
+                continue
+    return out
+
+
+def summarize_metrics(prom_path: Optional[str],
+                      jsonl_path: Optional[str]) -> List[str]:
+    samples: List[Tuple[str, float]] = []
+    src = ""
+    if prom_path and os.path.exists(prom_path):
+        samples = _parse_prometheus(prom_path)
+        src = os.path.basename(prom_path)
+    elif jsonl_path and os.path.exists(jsonl_path):
+        src = os.path.basename(jsonl_path)
+        last: Dict[str, Any] = {}
+        with open(jsonl_path) as f:
+            for line in f:
+                if line.strip():
+                    last = json.loads(line)
+        for m in last.get("metrics", []):
+            labels = m.get("labels") or []
+            suffix = ("{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+                      if labels else "")
+            samples.append((m["name"] + suffix, float(m["value"])))
+    if not samples:
+        return []
+    lines = [f"## Metrics — {len(samples)} samples ({src})", ""]
+    rows = [[name, _fmt(val)] for name, val in sorted(samples)
+            if "_bucket{" not in name]
+    lines += _table(["metric", "value"], rows)
+    return lines
+
+
+def summarize_drift(path: str) -> List[str]:
+    recs: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    if not recs:
+        return []
+    by_site: Dict[str, List[Dict[str, Any]]] = defaultdict(list)
+    for r in recs:
+        by_site[str(r.get("site", "?"))].append(r)
+    lines = [f"## Drift — {len(recs)} records, rolling fidelity "
+             f"{recs[-1].get('rolling_fidelity', float('nan')):.4f}", ""]
+    rows = []
+    for site, rs in sorted(by_site.items()):
+        fids = [float(r.get("fidelity", 0.0)) for r in rs]
+        worst = min(rs, key=lambda r: float(r.get("fidelity", 0.0)))
+        rows.append([site, str(len(rs)),
+                     f"{sum(fids) / len(fids):.4f}", f"{min(fids):.4f}",
+                     str(worst.get("shape", "?"))])
+    lines += _table(["site", "records", "mean fidelity", "min fidelity",
+                     "worst shape"], rows)
+    return lines
+
+
+def build_report(obs_dir: str) -> str:
+    sections: List[str] = [f"# Telemetry report — `{obs_dir}`", ""]
+    trace = os.path.join(obs_dir, "trace.json")
+    if os.path.exists(trace):
+        sections += summarize_trace(trace) + [""]
+    metrics = summarize_metrics(os.path.join(obs_dir, "metrics.prom"),
+                                os.path.join(obs_dir, "metrics.jsonl"))
+    if metrics:
+        sections += metrics + [""]
+    drift = os.path.join(obs_dir, "drift.jsonl")
+    if os.path.exists(drift):
+        sections += summarize_drift(drift) + [""]
+    if len(sections) <= 2:
+        sections.append("_no telemetry artifacts found_")
+    return "\n".join(sections).rstrip() + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("obs_dir", help="telemetry directory to summarize")
+    ap.add_argument("-o", "--output", default=None,
+                    help="write the markdown report here (default stdout)")
+    args = ap.parse_args(argv)
+    report = build_report(args.obs_dir)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(report)
+    else:
+        sys.stdout.write(report)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
