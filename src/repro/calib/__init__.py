@@ -30,6 +30,10 @@ from repro.calib.oracle import (OracleRow, fidelity_report, fidelity_row,
 from repro.calib.probes import (ProbeSweep, ProbeTimeout, level_windows,
                                 probe_compute, probe_issue, probe_latency,
                                 probe_stream_levels, probe_wave, run_probes)
+from repro.calib.residual import (RESIDUAL_SCHEMA, ResidualCorrector,
+                                  ResidualRow, fit_residual, load_residual,
+                                  load_residual_guarded, residual_pick,
+                                  rows_from_drift, rows_from_sweep)
 
 __all__ = [
     "Device", "JaxDevice", "VirtualDevice", "get_device",
@@ -43,4 +47,7 @@ __all__ = [
     "ProbeSweep", "ProbeTimeout", "level_windows", "probe_compute",
     "probe_issue", "probe_latency", "probe_stream_levels", "probe_wave",
     "run_probes",
+    "RESIDUAL_SCHEMA", "ResidualCorrector", "ResidualRow", "fit_residual",
+    "load_residual", "load_residual_guarded", "residual_pick",
+    "rows_from_drift", "rows_from_sweep",
 ]

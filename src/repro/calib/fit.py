@@ -46,6 +46,15 @@ def theil_sen(xs: Sequence[float], ys: Sequence[float]
     slopes = sorted((ys[j] - ys[i]) / (xs[j] - xs[i])
                     for i in range(len(xs)) for j in range(i + 1, len(xs))
                     if xs[j] != xs[i])
+    if not slopes:
+        # Every surviving x coincides (e.g. watchdog/NaN dropping reduced a
+        # sweep to one repeated point): there is no slope to take a median
+        # of.  A clean ValueError lets fit_topology(allow_degraded=True)
+        # keep the preset constant and record the reason, instead of the
+        # bare IndexError _median([]) used to raise.
+        raise ValueError(
+            f"degenerate sweep: all {len(xs)} samples share x={xs[0]!r}, "
+            f"no pairwise slope exists")
     slope = _median(slopes)
     intercept = _median(sorted(y - slope * x for x, y in zip(xs, ys)))
     return slope, intercept

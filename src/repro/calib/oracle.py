@@ -54,12 +54,22 @@ class OracleRow:
     oracle_s: float
     fidelity: float          # oracle_s / selected_s  (<= 1.0)
     oracle_model_rank: int   # 1 == model also ranked the oracle first
+    # Residual-corrected selection (DESIGN.md §12) — populated only when a
+    # corrector was passed to fidelity_row; appended at the END of as_list
+    # so existing column indices stay valid.
+    corrected: str = ""
+    corrected_s: float = 0.0
+    corrected_fidelity: float = 0.0
 
     def as_list(self) -> List:
-        return [self.hw, self.gemm, self.M, self.N, self.K,
-                self.n_candidates, self.selected, self.oracle,
-                f"{self.selected_s:.6e}", f"{self.oracle_s:.6e}",
-                f"{self.fidelity:.4f}", self.oracle_model_rank]
+        out = [self.hw, self.gemm, self.M, self.N, self.K,
+               self.n_candidates, self.selected, self.oracle,
+               f"{self.selected_s:.6e}", f"{self.oracle_s:.6e}",
+               f"{self.fidelity:.4f}", self.oracle_model_rank]
+        if self.corrected:
+            out += [self.corrected, f"{self.corrected_s:.6e}",
+                    f"{self.corrected_fidelity:.4f}"]
+        return out
 
 
 def _compute_lower_bound(p: GemmProblem, t: TileConfig,
@@ -146,7 +156,13 @@ def oracle_best(p: GemmProblem, hw: Topology, device: Device,
 
 
 def fidelity_row(hw: Topology, name: str, M: int, N: int, K: int,
-                 device: Device, prune: bool = True) -> OracleRow:
+                 device: Device, prune: bool = True,
+                 residual=None) -> OracleRow:
+    """One (preset, shape) fidelity cell.  ``residual`` (a
+    :class:`~repro.calib.residual.ResidualCorrector`) additionally prices
+    the corrector's pick over the same space — the corrected column is
+    evaluated WITHOUT installing the corrector process-wide, so the
+    analytical columns (and the goldens they pin) are untouched."""
     p = GemmProblem(M=M, N=N, K=K)
     cands = candidate_tiles(p, hw)
     sel = select_gemm_config(M, N, K, hw=hw)
@@ -162,12 +178,21 @@ def fidelity_row(hw: Topology, name: str, M: int, N: int, K: int,
     # Where did the model rank the device's true optimum?
     oracle_i = cands.index(best_t)
     rank = 1 + int(np.sum(scores < scores[oracle_i]))
+    corrected, corr_s, corr_fid = "", 0.0, 0.0
+    if residual is not None:
+        from repro.calib.residual import residual_pick
+        pick, _ = residual_pick(residual, p, hw)
+        corr_s = device.gemm_time(p, pick)
+        corrected = str(pick)
+        corr_fid = best_s / corr_s if corr_s else 0.0
     return OracleRow(
         hw=hw.name, gemm=name, M=M, N=N, K=K, n_candidates=len(cands),
         selected=str(sel.config), oracle=str(best_t),
         selected_s=sel_s, oracle_s=best_s,
         fidelity=best_s / sel_s if sel_s else 0.0,
-        oracle_model_rank=rank)
+        oracle_model_rank=rank,
+        corrected=corrected, corrected_s=corr_s,
+        corrected_fidelity=corr_fid)
 
 
 def scaled_llama3_shapes(sizes: Sequence[str] = ("8b",),
@@ -191,10 +216,12 @@ def scaled_llama3_shapes(sizes: Sequence[str] = ("8b",),
 def fidelity_sweep(hw: Topology, device: Device,
                    shapes: Sequence[Tuple[str, int, int, int]],
                    verbose: bool = False,
-                   prune: bool = True) -> List[OracleRow]:
+                   prune: bool = True,
+                   residual=None) -> List[OracleRow]:
     rows = []
     for (name, M, N, K) in shapes:
-        row = fidelity_row(hw, name, M, N, K, device, prune=prune)
+        row = fidelity_row(hw, name, M, N, K, device, prune=prune,
+                           residual=residual)
         rows.append(row)
         if verbose:
             print(f"  [{hw.name}] {name}: fidelity {row.fidelity:.4f} "
@@ -210,7 +237,8 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
                     devices: Optional[Dict[str, Device]] = None,
                     out_dir: str = OUT_DIR,
                     verbose: bool = True,
-                    prune: bool = False) -> Dict:
+                    prune: bool = False,
+                    residuals: Optional[Dict] = None) -> Dict:
     """The paper-style fidelity table: % of exhaustive-oracle performance
     achieved by analytical selection, per preset over the llama3 sweep.
 
@@ -220,8 +248,14 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
     simulator pass where the device supports it; ``prune=True`` restores
     the lower-bound-pruned search (handy on slow wall-clock devices, where
     the admissible bound skips hopeless candidates).  Artifacts:
-    ``fidelity_report.{json,csv,md}`` in ``out_dir``."""
+    ``fidelity_report.{json,csv,md}`` in ``out_dir``.
+
+    ``residuals`` maps preset name -> fitted
+    :class:`~repro.calib.residual.ResidualCorrector`; presets present in
+    the map get the residual-corrected columns (and summary stats)
+    alongside the analytical ones."""
     devices = devices or {}
+    residuals = residuals or {}
     shapes = scaled_llama3_shapes(sizes, tokens, scale)
     report: Dict = {"scale": scale, "sizes": list(sizes),
                     "tokens": list(tokens), "prune": prune,
@@ -230,8 +264,9 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
     for preset in presets:
         hw = get_hardware(preset)
         device = devices.get(preset) or VirtualDevice(hw)
+        res = residuals.get(preset)
         rows = fidelity_sweep(hw, device, shapes, verbose=verbose,
-                              prune=prune)
+                              prune=prune, residual=res)
         fids = [r.fidelity for r in rows]
         report["presets"][preset] = {
             "device": device.name,
@@ -241,6 +276,12 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
             "at_95pct": sum(f >= 0.95 for f in fids),
             "oracle_rank1": sum(r.oracle_model_rank == 1 for r in rows),
         }
+        if res is not None:
+            cfids = [r.corrected_fidelity for r in rows]
+            report["presets"][preset].update({
+                "mean_corrected_fidelity": sum(cfids) / len(cfids),
+                "worst_corrected_fidelity": min(cfids),
+            })
         report["rows"] += [r.as_list() for r in rows]
         if verbose:
             s = report["presets"][preset]
@@ -255,6 +296,8 @@ def fidelity_report(presets: Sequence[str] = tuple(PRESETS),
     header = ["hw", "gemm", "M", "N", "K", "n_candidates", "selected",
               "oracle", "selected_s", "oracle_s", "fidelity",
               "oracle_model_rank"]
+    if residuals:
+        header += ["corrected", "corrected_s", "corrected_fidelity"]
     with open(os.path.join(out_dir, "fidelity_report.json"), "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     import csv

@@ -74,6 +74,13 @@ class Selection:
     predicted: LatencyBreakdown
     hardware: str
     n_candidates: int
+    # Content fingerprint of the topology the prediction was priced against
+    # (``topology_fingerprint(hw)``).  Downstream consumers — the drift
+    # monitor's JSONL rows, the residual corrector's training-set grouping —
+    # key on this, never on ``hardware`` (a preset *name* survives
+    # recalibration unchanged and can't be validated against the live
+    # topology).  Empty only for hand-built Selections in old tests.
+    topo_fingerprint: str = ""
 
     @property
     def predicted_tflops(self) -> float:
@@ -710,7 +717,8 @@ def fallback_ladder(p: GemmProblem, hw: HardwareSpec,
     def _sel(t: TileConfig, n: int) -> "Selection":
         return Selection(problem=p, config=t,
                          predicted=gemm_latency(p, t, hw),
-                         hardware=hw.name, n_candidates=n)
+                         hardware=hw.name, n_candidates=n,
+                         topo_fingerprint=topology_fingerprint(hw))
 
     tried = [primary]
     ranked = rank_candidates(p, hw)
@@ -817,6 +825,125 @@ def emit_fallback(sel: "Selection", rung: str) -> None:
     selection hooks as source ``fallback:<rung>``; rung in
     {next, safe, reference}."""
     _emit_selection(sel, f"fallback:{rung}")
+
+
+# ---------------------------------------------------------------------------
+# Learned residual corrector — opt-in post-ranking stage (DESIGN.md §12).
+#
+# The analytical model stays the interpretable prior: with no corrector
+# installed every code path above/below is untouched and selections are
+# bit-identical.  With one installed (``repro.calib.residual`` fits it on
+# the drift stream; core only duck-types it), the scalar path re-prices the
+# top-F analytically-ranked candidates with ``corrector.correct(...)`` and
+# takes the argmin over the corrected totals — the vectorized menu pass
+# still does ALL the enumeration/filter/ranking work, the corrector touches
+# F ≈ 8 finalists.  Residual selections memoise under a separate namespace
+# (keyed by the corrector's own content fingerprint) and NEVER touch the
+# persistent disk table, so analytical warm-starts can't be poisoned by a
+# since-retired corrector.  A corrector whose topology fingerprint does not
+# match the live topology is ignored (counted metric), exactly like a
+# stale calibrated-topology artifact.
+# ---------------------------------------------------------------------------
+
+_RESIDUAL = None        # duck-typed: .fingerprint, .content_fingerprint(),
+#                         .top_f, .correct(problem, configs, totals, hw)
+
+
+def set_residual_corrector(res) -> object:
+    """Install (or with None remove) the process-wide residual corrector;
+    returns the previous one.  Duck-typed — calib owns the implementation,
+    core never imports it."""
+    global _RESIDUAL
+    prev = _RESIDUAL
+    _RESIDUAL = res
+    return prev
+
+
+def get_residual_corrector():
+    return _RESIDUAL
+
+
+def _residual_for(hw: HardwareSpec, fp: str):
+    """The installed corrector iff it was fit for THIS topology's content
+    fingerprint; a mismatch (recalibrated topology, wrong preset) is
+    counted and the selection falls back to the pure analytical path."""
+    res = _RESIDUAL
+    if res is None:
+        return None
+    if getattr(res, "fingerprint", None) != fp:
+        obs_metrics.inc("residual_fingerprint_mismatch",
+                        labels={"hardware": hw.name})
+        return None
+    return res
+
+
+def select_topk(
+    p: GemmProblem,
+    hw: HardwareSpec = TPU_V5E,
+    k: int = 8,
+    *,
+    allow_split_k: bool = True,
+    allow_grouping: bool = True,
+) -> Tuple[List[TileConfig], np.ndarray, int]:
+    """The top-``k`` candidates under the analytical model: (configs,
+    their predicted totals, total candidate count).  Element 0 is exactly
+    the config ``select_fast`` would return (same 1e-15 tie tolerance, same
+    max-volume tie-break); the rest follow in (score, -volume, enumeration
+    order) rank.  This is the residual corrector's re-pricing slate."""
+    cands = candidate_tiles(p, hw, allow_split_k=allow_split_k,
+                            allow_grouping=allow_grouping)
+    if not cands:
+        raise ValueError(f"empty candidate space for {p} on {hw.name}")
+    n = len(cands)
+    scores = score_candidates(p, cands, hw)
+    bm = np.fromiter((t.bm for t in cands), np.int64, n)
+    bn = np.fromiter((t.bn for t in cands), np.int64, n)
+    bk = np.fromiter((t.bk for t in cands), np.int64, n)
+    win = _argmin_index(scores, bm, bn, bk)
+    # Rank by (score, -volume, enumeration order); hoist the tie-broken
+    # winner to the front so corrected-argmin guards can reference it.
+    order = np.lexsort((np.arange(n), -(bm * bn * bk), scores))
+    head = [win] + [int(i) for i in order[:k] if int(i) != win]
+    idx = head[:max(int(k), 1)]
+    return [cands[i] for i in idx], scores[idx], n
+
+
+def _select_residual(M: int, N: int, K: int, *, in_dtype: str,
+                     out_dtype: str, batch: int, ep: Epilogue,
+                     hw: HardwareSpec, fp: str, res, key: Tuple,
+                     allow_split_k: bool, allow_grouping: bool,
+                     ) -> "Selection":
+    """The corrector-on scalar selection: memoised under a residual
+    namespace, never persisted to disk, emitted as source ``residual``.
+    ``predicted`` stays the analytical breakdown of the chosen config —
+    drift rows keep measuring the model, not the corrector."""
+    memo_key = key + (fp, "residual", res.content_fingerprint())
+    hit = _CACHE.get(memo_key)
+    if hit is not None:
+        _emit_selection(hit, "memo")
+        return hit
+    p = GemmProblem(M=M, N=N, K=K, in_dtype=in_dtype,
+                    out_dtype=out_dtype, batch=batch, epilogue=ep)
+    top_f = int(getattr(res, "top_f", 8))
+    configs, totals, n_cands = select_topk(
+        p, hw, top_f, allow_split_k=allow_split_k,
+        allow_grouping=allow_grouping)
+    corrected = np.asarray(res.correct(p, configs, totals, hw), np.float64)
+    # Switch away from the analytical winner (index 0) only when the
+    # corrected advantage clears the corrector's margin — an uncertain
+    # residual must not churn selections the model already got right.
+    margin = float(getattr(res, "switch_margin", 0.0))
+    j = int(np.argmin(corrected))
+    if j != 0 and not corrected[j] < corrected[0] * (1.0 - margin):
+        j = 0
+    best = configs[j]
+    sel = Selection(problem=p, config=best,
+                    predicted=gemm_latency(p, best, hw),
+                    hardware=hw.name, n_candidates=n_cands,
+                    topo_fingerprint=fp)
+    _CACHE[memo_key] = sel
+    _emit_selection(sel, "residual")
+    return sel
 
 
 def load_selection_cache(path: Optional[str] = None) -> int:
@@ -997,7 +1124,15 @@ def select_gemm_config(
     # SAME process must cold-rescore, exactly like the disk table's
     # per-entry fingerprint forces across processes.  The fingerprint is
     # identity-memoized on the Topology, so a memo hit stays O(1).
-    memo_key = key + (topology_fingerprint(hw),)
+    fp = topology_fingerprint(hw)
+    res = _residual_for(hw, fp)
+    if res is not None:
+        return _select_residual(M, N, K, in_dtype=in_dtype,
+                                out_dtype=out_dtype, batch=batch, ep=ep,
+                                hw=hw, fp=fp, res=res, key=key,
+                                allow_split_k=allow_split_k,
+                                allow_grouping=allow_grouping)
+    memo_key = key + (fp,)
     hit = _CACHE.get(memo_key)
     if hit is not None:
         _emit_selection(hit, "memo")
@@ -1016,7 +1151,8 @@ def select_gemm_config(
     best, n_cands = select_fast(p, hw, allow_split_k=allow_split_k,
                                 allow_grouping=allow_grouping)
     sel = Selection(problem=p, config=best, predicted=gemm_latency(p, best, hw),
-                    hardware=hw.name, n_candidates=n_cands)
+                    hardware=hw.name, n_candidates=n_cands,
+                    topo_fingerprint=fp)
     _CACHE[memo_key] = sel
     _disk_record(key, sel, hw)
     _emit_selection(sel, "cold")
@@ -1047,7 +1183,8 @@ def _rehydrate_disk_entry(p: GemmProblem, key: Tuple,
         return None
     return Selection(problem=p, config=best,
                      predicted=gemm_latency(p, best, hw),
-                     hardware=hw.name, n_candidates=n_cands)
+                     hardware=hw.name, n_candidates=n_cands,
+                     topo_fingerprint=_topo_fingerprint(hw))
 
 
 def select_gemm_config_batch(
@@ -1074,6 +1211,17 @@ def select_gemm_config_batch(
     once and share the resulting Selection (one "cold" hook emission)."""
     ep = epilogue or EPILOGUE_NONE
     fp = topology_fingerprint(hw)
+    if _residual_for(hw, fp) is not None:
+        # Corrector-on batches route through the scalar path: the residual
+        # re-prices per-shape finalists anyway, and the scalar memo
+        # namespace keeps hit/miss telemetry consistent with it.
+        return [select_gemm_config(int(s[0]), int(s[1]), int(s[2]),
+                                   in_dtype=in_dtype, out_dtype=out_dtype,
+                                   batch=int(s[3]) if len(s) > 3 else batch,
+                                   epilogue=ep, hw=hw,
+                                   allow_split_k=allow_split_k,
+                                   allow_grouping=allow_grouping)
+                for s in shapes]
     out: List[Optional[Selection]] = [None] * len(shapes)
     cold: Dict[Tuple, List[int]] = {}      # key -> indices awaiting scoring
     cold_probs: Dict[Tuple, GemmProblem] = {}
@@ -1115,7 +1263,8 @@ def select_gemm_config_batch(
         for key, (best, n_cands), bd in zip(keys, results, breakdowns):
             p = cold_probs[key]
             sel = Selection(problem=p, config=best, predicted=bd,
-                            hardware=hw.name, n_candidates=n_cands)
+                            hardware=hw.name, n_candidates=n_cands,
+                            topo_fingerprint=fp)
             _CACHE[key + (fp,)] = sel
             records.append((key, sel))
             for i in cold[key]:

@@ -46,7 +46,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bucketing import BucketPlan, step_gemms
-from repro.core.selector import select_gemm_config_batch
+from repro.core.selector import (get_residual_corrector,
+                                 select_gemm_config_batch)
+from repro.core.simulator import simulate_gemm
 from repro.core.topology import topology_fingerprint
 from repro.kernels import ops
 from repro.nn.model import Model
@@ -204,16 +206,30 @@ class ServingEngine:
                  else {int(r.prompt.size) for r in self._queue})
         ms.add(self.max_batch)                # the decode step's M extent
         shapes = [(m, n, k) for m in sorted(ms) for (n, k) in gemms]
+        hw = ops.get_default_hardware()
         with obs_trace.span("warm_start", cat="engine", track="engine",
                             args={"n_shapes": len(shapes)}):
-            sels = select_gemm_config_batch(shapes,
-                                            hw=ops.get_default_hardware())
+            sels = select_gemm_config_batch(shapes, hw=hw)
         # The decode step's modeled latency: the summed priced latency of
         # its step GEMMs at M = max_batch — the drift monitor's prediction
         # for every measured sync window.
         self.predicted_step_s = sum(
             s.predicted.total for s, (m, _n, _k) in zip(sels, shapes)
             if m == self.max_batch)
+        # Per-GEMM drift rows (site "warm_gemm"): when a drift monitor is
+        # installed, check every warm selection's priced latency against
+        # the event simulator.  Unlike the whole-step decode rows (config
+        # None), these carry a config AND the topology fingerprint — the
+        # residual corrector's training set (DESIGN.md §12), emitted for
+        # free on every traced serving run.
+        mon = get_drift_monitor()
+        if mon is not None:
+            for s in sels:
+                try:
+                    meas = simulate_gemm(s.problem, s.config, hw).time
+                except (ValueError, RuntimeError):
+                    continue
+                mon.record_selection(s, meas, site="warm_gemm")
         return len(shapes)
 
     # -- serving loop ------------------------------------------------------
@@ -460,4 +476,5 @@ class ServingEngine:
                                    / len(self.straggler.times)
                                    if self.straggler.times else 0.0),
             "queued_left": len(self._queue),
+            "residual_active": get_residual_corrector() is not None,
         }

@@ -46,7 +46,9 @@ import jax
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core.bucketing import plan_buckets, step_gemms
 from repro.core.hardware import TPU_V5E
-from repro.core.selector import load_selection_cache, select_gemm_config
+from repro.core.selector import (get_residual_corrector,
+                                 load_selection_cache, select_gemm_config,
+                                 set_residual_corrector)
 from repro.core.simulator import simulate_gemm
 from repro.core.topology import load_calibrated_topology_guarded
 from repro.distributed import param_shardings
@@ -76,6 +78,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="calibrated-topology artifact to select against "
                          "(guarded load: corrupt artifacts quarantine and "
                          "fall back to the stock preset)")
+    ap.add_argument("--residual", default=None, metavar="PATH",
+                    help="residual-corrector artifact (repro/residual/v1) "
+                         "to re-price top-ranked candidates with (guarded "
+                         "load: corrupt artifacts quarantine, stale "
+                         "fingerprints are ignored; serving falls back to "
+                         "the pure analytical model)")
     ap.add_argument("--ragged", action="store_true",
                     help="draw ragged prompt lengths in "
                          "[prompt-len/2, prompt-len] and admit them into "
@@ -134,6 +142,9 @@ def run_serving(args: argparse.Namespace, *,
 
     prev_tracer = prev_mon = drift_mon = None
     prev_metrics = False
+    # _run_serving installs the --residual corrector after the topology is
+    # known; restore whatever was there before, success or raise.
+    prev_res = get_residual_corrector()
     if trace_dir:
         prev_tracer = obs_trace.set_tracer(obs_trace.Tracer())
         prev_metrics = obs_metrics.enable_metrics(True)
@@ -148,6 +159,7 @@ def run_serving(args: argparse.Namespace, *,
             _export_telemetry(trace_dir, args)
         return out
     finally:
+        set_residual_corrector(prev_res)
         if trace_dir:
             obs_trace.set_tracer(prev_tracer)
             set_drift_monitor(prev_mon)
@@ -204,6 +216,27 @@ def _run_serving(args: argparse.Namespace, *,
         else:
             say(f"[serve] serving against calibrated topology "
                 f"{topo.name}")
+
+    res_info: Dict = {"residual": None, "residual_degraded": None}
+    if getattr(args, "residual", None):
+        # Guarded load against the topology actually served (which the
+        # --topology block above may have just swapped in); run_serving's
+        # finally restores the previous corrector.
+        from repro.calib.residual import load_residual_guarded
+        corr, rprov = load_residual_guarded(
+            args.residual, expect=ops.get_default_hardware())
+        if corr is None:
+            res_info["residual_degraded"] = rprov.get("degraded")
+            say(f"[serve] residual artifact rejected "
+                f"({rprov.get('degraded')}); serving on the pure "
+                f"analytical model")
+        else:
+            set_residual_corrector(corr)
+            res_info["residual"] = corr.content_fingerprint()
+            say(f"[serve] residual corrector active (digest "
+                f"{corr.content_fingerprint()}, top-{corr.top_f} "
+                f"re-pricing, fit on {corr.provenance.get('n_rows', '?')} "
+                f"drift rows)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
@@ -302,8 +335,10 @@ def _run_serving(args: argparse.Namespace, *,
         "bucket_hits": stats["bucket_hits"],
         "dispatch_s_mean": stats["dispatch_s_mean"],
         "device_step_s_mean": stats["device_step_s_mean"],
+        "residual_active": stats["residual_active"],
         "results": results,
         **topo_info,
+        **res_info,
     }
 
 

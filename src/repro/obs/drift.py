@@ -91,14 +91,21 @@ class DriftMonitor:
         """Record straight off a ``repro.core.selector.Selection`` (duck-
         typed — obs never imports core): the attached priced latency
         ``sel.predicted.total`` is the prediction, ``measured_s`` the
-        device/simulator time for the SAME config."""
+        device/simulator time for the SAME config.
+
+        The ``topo`` column defaults to ``sel.topo_fingerprint`` — the
+        content hash the selection was priced against — never the preset
+        *name* (``sel.hardware``): a name can't be validated against the
+        live topology, so name-keyed rows would silently poison the
+        residual corrector's training set.  Selections predating the
+        fingerprint field leave the column empty."""
         p, c = sel.problem, sel.config
         return self.record(
             site=site, shape=(p.M, p.N, p.K, p.batch),
             config={"bm": c.bm, "bn": c.bn, "bk": c.bk,
                     "split_k": c.split_k, "group_m": c.group_m,
                     "schedule": c.schedule},
-            topo=topo or sel.hardware,
+            topo=topo or getattr(sel, "topo_fingerprint", "") or "",
             predicted_s=float(sel.predicted.total),
             measured_s=float(measured_s), **extra)
 

@@ -112,6 +112,41 @@ def test_theil_sen_exact_on_collinear_and_robust_to_outlier():
     assert abs(slope - 2.0) / 2.0 < 0.35               # not dragged away
 
 
+def test_theil_sen_degenerate_sweep_is_a_clean_valueerror():
+    """Regression: a sweep whose surviving samples all share one x (the
+    watchdog/NaN filters can reduce a sweep to a single repeated point)
+    used to die in ``_median([])`` with a bare IndexError.  It must raise
+    the ValueError the fail-soft fit path classifies."""
+    with pytest.raises(ValueError, match="degenerate sweep"):
+        theil_sen([2.0, 2.0, 2.0], [1.0, 1.1, 0.9])
+    with pytest.raises(ValueError, match="degenerate sweep"):
+        theil_sen([7.0, 7.0], [1.0, 1.2])              # two repeated points
+    with pytest.raises(ValueError, match=">= 2 samples"):
+        theil_sen([7.0], [1.0])        # too-few guard stays its own error
+
+
+def test_fit_topology_degrades_on_degenerate_sweep():
+    """The fit-level contract for the same bug: under
+    ``allow_degraded=True`` a degenerate probe sweep keeps the preset
+    constant and records the reason; without it, calibration aborts with
+    the classified error instead of an IndexError."""
+    import dataclasses as _dc
+
+    from repro.calib import ProbeSweep
+    dev = VirtualDevice(TPU_V5E)
+    probes = dict(run_probes(dev, TPU_V5E, dtypes=("bfloat16",)))
+    (key, sweep), = [(k, s) for k, s in probes.items()
+                     if s.kind == "compute"]
+    probes[key] = _dc.replace(
+        sweep, samples=((8.0, 1e-3), (8.0, 1.1e-3), (8.0, 0.9e-3)))
+    res = fit_topology(TPU_V5E, dev, probes=probes, allow_degraded=True)
+    assert "degenerate sweep" in res.degraded["peak_flops.bfloat16"]
+    assert res.topology.peak_flops["bfloat16"] == \
+        TPU_V5E.peak_flops["bfloat16"]                 # preset kept
+    with pytest.raises(ValueError, match="degenerate sweep"):
+        fit_topology(TPU_V5E, dev, probes=probes)
+
+
 # ---------------------------------------------------------------------------
 # Fit: planted-constant recovery (the tentpole acceptance).
 # ---------------------------------------------------------------------------

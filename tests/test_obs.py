@@ -293,6 +293,34 @@ def test_drift_on_virtual_device(clean_obs, tmp_path):
     assert recs[-1]["topo"] == hw.name
 
 
+def test_record_selection_defaults_to_topology_fingerprint(clean_obs,
+                                                           tmp_path):
+    """Regression: the ``topo`` column used to default to the preset NAME
+    (``sel.hardware``), which survives recalibration unchanged and cannot
+    be validated — poisoning the residual corrector's training set.  It
+    must default to the selection's topology fingerprint, and stay empty
+    for legacy selection objects predating the field."""
+    from repro.core import topology_fingerprint
+    hw = PRESETS["tpu_v5e"]
+    sel = select_gemm_config(256, 512, 512, hw=hw)
+    assert sel.topo_fingerprint == topology_fingerprint(hw)
+    path = str(tmp_path / "d.jsonl")
+    with DriftMonitor(path=path, registry=obs_metrics.MetricsRegistry()) \
+            as mon:
+        mon.record_selection(sel, 1e-3)                # no explicit topo
+        mon.record_selection(sel, 1e-3, topo="custom") # explicit still wins
+
+        class _Legacy:                                 # pre-fingerprint sel
+            problem, config, predicted = sel.problem, sel.config, \
+                sel.predicted
+        mon.record_selection(_Legacy(), 1e-3)
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    assert recs[0]["topo"] == topology_fingerprint(hw)
+    assert recs[0]["topo"] != hw.name
+    assert recs[1]["topo"] == "custom"
+    assert recs[2]["topo"] == ""
+
+
 def test_record_step_drift_noop_without_monitor(clean_obs):
     assert obs_drift.get_drift_monitor() is None
     obs_drift.record_step_drift(site="decode_step", shape=(4,),
@@ -458,6 +486,40 @@ def test_engine_tracing_identical_output(clean_obs):
     snap = obs_metrics.get_registry().snapshot()
     assert snap["engine_steps"] == on["steps"]
     assert snap["engine_tokens_emitted"] == on["tokens_emitted"]
+
+
+def test_obs_report_skips_truncated_jsonl_tail(clean_obs, tmp_path):
+    """Regression: a serving process killed mid-append leaves a truncated
+    trailing JSONL line; ``tools/obs_report.py`` used to die on it with a
+    JSONDecodeError.  It must summarize the records that DID land and note
+    how many lines it skipped."""
+    from tools.obs_report import build_report, summarize_drift
+    obs = tmp_path / "obs"
+    obs.mkdir()
+    drift = obs / "drift.jsonl"
+    with DriftMonitor(path=str(drift),
+                      registry=obs_metrics.MetricsRegistry()) as mon:
+        mon.record(site="gemm", shape=(64, 64, 64),
+                   predicted_s=1e-3, measured_s=1e-3)
+        mon.record(site="gemm", shape=(64, 64, 64),
+                   predicted_s=1e-3, measured_s=2e-3)
+    with open(drift, "a") as f:
+        f.write('{"schema": "repro/drift/v1", "seq": 3, "site": "ge')
+    reg = MetricsRegistry()
+    reg.counter("engine_steps").inc(4)
+    reg.write_jsonl(str(obs / "metrics.jsonl"), kind="final")
+    with open(obs / "metrics.jsonl", "a") as f:
+        f.write('{"kind": "final", "metr')
+    report = build_report(str(obs))
+    assert "## Drift — 2 records" in report
+    assert "## Metrics" in report
+    assert report.count("skipped 1 malformed line (truncated writer tail)") \
+        == 2
+    # a file reduced to ONLY a truncated line: note, no crash, no table
+    lone = obs / "lone.jsonl"
+    lone.write_text('{"schema": "repro/drift/v1"')
+    lines = summarize_drift(str(lone))
+    assert lines == ["_skipped 1 malformed line (truncated writer tail)_"]
 
 
 def test_engine_quiet_suppresses_stdout(clean_obs, capsys):

@@ -43,6 +43,32 @@ def _table(headers: List[str], rows: List[List[str]]) -> List[str]:
     return out
 
 
+def _read_jsonl(path: str) -> Tuple[List[Dict[str, Any]], int]:
+    """Parse a JSONL file, skipping malformed lines (a writer killed
+    mid-append leaves a truncated trailing line — the crash-drain case;
+    the report must summarize the records that DID land).  Returns
+    (records, number of malformed lines skipped)."""
+    recs: List[Dict[str, Any]] = []
+    skipped = 0
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                skipped += 1
+    return recs, skipped
+
+
+def _skipped_note(skipped: int) -> List[str]:
+    if not skipped:
+        return []
+    s = "s" if skipped != 1 else ""
+    return ["", f"_skipped {skipped} malformed line{s} "
+                f"(truncated writer tail)_"]
+
+
 def summarize_trace(path: str) -> List[str]:
     with open(path) as f:
         doc = json.load(f)
@@ -92,38 +118,47 @@ def summarize_metrics(prom_path: Optional[str],
                       jsonl_path: Optional[str]) -> List[str]:
     samples: List[Tuple[str, float]] = []
     src = ""
+    skipped = 0
     if prom_path and os.path.exists(prom_path):
         samples = _parse_prometheus(prom_path)
         src = os.path.basename(prom_path)
     elif jsonl_path and os.path.exists(jsonl_path):
         src = os.path.basename(jsonl_path)
-        last: Dict[str, Any] = {}
-        with open(jsonl_path) as f:
-            for line in f:
-                if line.strip():
-                    last = json.loads(line)
-        for m in last.get("metrics", []):
-            labels = m.get("labels") or []
-            suffix = ("{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
-                      if labels else "")
-            samples.append((m["name"] + suffix, float(m["value"])))
+        recs, skipped = _read_jsonl(jsonl_path)
+        last: Dict[str, Any] = recs[-1] if recs else {}
+        metrics = last.get("metrics", {})
+        if isinstance(metrics, dict):
+            # MetricsRegistry.write_jsonl: {"name{labels}": value, ...},
+            # histograms as {"count": ..., "sum": ..., "buckets": ...}.
+            for name, value in metrics.items():
+                if isinstance(value, dict):
+                    for part in ("count", "sum"):
+                        if part in value:
+                            samples.append((f"{name}_{part}",
+                                            float(value[part])))
+                else:
+                    samples.append((name, float(value)))
+        else:
+            # legacy list-of-samples form
+            for m in metrics:
+                labels = m.get("labels") or []
+                suffix = ("{" + ",".join(f'{k}="{v}"' for k, v in labels)
+                          + "}" if labels else "")
+                samples.append((m["name"] + suffix, float(m["value"])))
     if not samples:
         return []
     lines = [f"## Metrics — {len(samples)} samples ({src})", ""]
     rows = [[name, _fmt(val)] for name, val in sorted(samples)
             if "_bucket{" not in name]
     lines += _table(["metric", "value"], rows)
+    lines += _skipped_note(skipped)
     return lines
 
 
 def summarize_drift(path: str) -> List[str]:
-    recs: List[Dict[str, Any]] = []
-    with open(path) as f:
-        for line in f:
-            if line.strip():
-                recs.append(json.loads(line))
+    recs, skipped = _read_jsonl(path)
     if not recs:
-        return []
+        return _skipped_note(skipped)[1:] if skipped else []
     by_site: Dict[str, List[Dict[str, Any]]] = defaultdict(list)
     for r in recs:
         by_site[str(r.get("site", "?"))].append(r)
@@ -138,6 +173,7 @@ def summarize_drift(path: str) -> List[str]:
                      str(worst.get("shape", "?"))])
     lines += _table(["site", "records", "mean fidelity", "min fidelity",
                      "worst shape"], rows)
+    lines += _skipped_note(skipped)
     return lines
 
 
